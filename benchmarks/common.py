@@ -1,0 +1,72 @@
+"""Shared benchmark setup (graph + engine construction, timing)."""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import (
+    Counters, HostCache, SSOEngine, StorageTier, build_plan, modeled_time,
+)
+from repro.core.costmodel import PAPER_WORKSTATION
+from repro.graph import (
+    gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
+)
+from repro.graph.csr import add_self_loops
+from repro.graph.synthetic import random_features, random_labels
+from repro.models.gnn.layers import get_gnn
+
+
+def make_workload(
+    n_nodes: int = 20000, avg_deg: int = 10, n_parts: int = 16,
+    d_feat: int = 64, d_hidden: int = 64, n_layers: int = 3,
+    n_classes: int = 10, seed: int = 0, model: str = "gcn",
+):
+    g = add_self_loops(kronecker_graph(n_nodes, avg_deg, seed=seed))
+    res = switching_aware_partition(g, n_parts, max_iters=20, seed=seed)
+    ew = gcn_norm_coeffs(g)
+    plan = build_plan(g, res.parts, n_parts, edge_weight=ew)
+    X = random_features(g.n_nodes, d_feat, seed)
+    Y = random_labels(g.n_nodes, n_classes, seed)
+    dims = [d_feat] + [d_hidden] * (n_layers - 1) + [n_classes]
+    spec = get_gnn(model)
+    params = spec.init(
+        jax.random.PRNGKey(seed), d_feat, d_hidden, n_classes, n_layers
+    )
+    return dict(
+        g=g, plan=plan, ew=ew, spec=spec, params=params, dims=dims,
+        X=X[plan.ro.perm], Y=Y[plan.ro.perm], parts=res.parts,
+    )
+
+
+def run_engine_epoch(
+    wl: Dict, mode: str, cache_bytes: int, epochs: int = 1,
+    overlap: bool = False,
+):
+    """Returns (wall_s_per_epoch, modeled_s_per_epoch, counters)."""
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    cache = HostCache(cache_bytes, st_, c)
+    eng = SSOEngine(
+        wl["spec"], wl["plan"], wl["dims"], st_, cache, c, mode=mode,
+        overlap=overlap,
+    )
+    eng.initialize(wl["X"])
+    # warmup epoch compiles the jitted layer fns
+    eng.run_epoch(wl["params"], wl["Y"])
+    c.reset()
+    t0 = time.perf_counter()
+    for _ in range(epochs):
+        loss, _ = eng.run_epoch(wl["params"], wl["Y"])
+    wall = (time.perf_counter() - t0) / epochs
+    mt = modeled_time(c, PAPER_WORKSTATION)
+    eng.close()
+    st_.close()
+    return wall, mt, c, loss
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,30 @@
+"""Paper Fig 12: sensitivity to model type (GCN / GAT / GraphSAGE) and
+number of layers — GriNNder vs HongTu modeled epoch time."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_workload, run_engine_epoch
+
+
+def main():
+    for model in ["gcn", "gat", "sage"]:
+        for n_layers in [3, 5]:
+            wl = make_workload(
+                n_nodes=12000, n_layers=n_layers, d_feat=48, d_hidden=48,
+                n_parts=16, model=model,
+            )
+            D = wl["g"].n_nodes * 48 * 4
+            cache = int(2.5 * D)
+            out = {}
+            for mode in ["snapshot", "regather"]:
+                wall, mt, c, loss = run_engine_epoch(wl, mode, cache)
+                out[mode] = mt.overlapped
+            emit(
+                f"fig12/{model}_L{n_layers}", out["regather"] * 1e6,
+                f"modeled GRD={out['regather']*1e3:.1f}ms "
+                f"HongTu={out['snapshot']*1e3:.1f}ms "
+                f"speedup x{out['snapshot']/out['regather']:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

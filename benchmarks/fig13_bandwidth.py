@@ -1,0 +1,53 @@
+"""Paper Fig 13b + §8.9: storage-bandwidth sensitivity and SSD write volume.
+
+Replays one epoch's byte counters through Gen4 / Gen5 / RAID5 tier models
+(the paper's three SSD configurations) and reports write volume per epoch."""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+
+from benchmarks.common import emit, make_workload
+from repro.core import Counters, HostCache, SSOEngine, StorageTier
+from repro.core.costmodel import (
+    GEN4_SSD, PAPER_WORKSTATION, RAID5, modeled_time,
+)
+
+
+def main():
+    wl = make_workload(n_nodes=16000, n_layers=3, d_feat=64, d_hidden=64,
+                       n_parts=16)
+    D = wl["g"].n_nodes * 64 * 4
+    counters = {}
+    for mode in ["snapshot", "regather"]:
+        c = Counters()
+        st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+        eng = SSOEngine(
+            wl["spec"], wl["plan"], wl["dims"], st_,
+            HostCache(int(2.5 * D), st_, c), c, mode=mode,
+        )
+        eng.initialize(wl["X"])
+        c.reset()
+        eng.run_epoch(wl["params"], wl["Y"])
+        counters[mode] = c
+        st_.close()
+    for name, bw in [("gen4", GEN4_SSD), ("gen5", PAPER_WORKSTATION),
+                     ("raid5", RAID5)]:
+        ts = {m: modeled_time(c, bw).overlapped for m, c in counters.items()}
+        emit(
+            f"fig13b/{name}", ts["regather"] * 1e6,
+            f"GRD={ts['regather']*1e3:.1f}ms HongTu={ts['snapshot']*1e3:.1f}ms "
+            f"speedup x{ts['snapshot']/ts['regather']:.2f}",
+        )
+    wv = {m: c.storage_write_bytes for m, c in counters.items()}
+    emit(
+        "sec8_9/write_volume", wv["regather"] / 1e3,
+        f"GRD={wv['regather']/1e6:.1f}MB/epoch "
+        f"HongTu={wv['snapshot']/1e6:.1f}MB/epoch "
+        f"ratio x{wv['snapshot']/max(wv['regather'],1):.1f} "
+        f"(paper IGBM: 2.1GB vs 192.4GB)",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+artifacts. Usage: PYTHONPATH=src python benchmarks/make_experiments_tables.py
+[results_dir]"""
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}MB"
+    return f"{b/1e3:.0f}KB"
+
+
+def load(d):
+    rows = []
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = []
+    out.append(
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| dominant | MODEL_FLOPS/HLO | HBM/dev |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        if r.get("variant", "base") != "base":
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]
+        hbm = (
+            mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]
+            - mem["alias_bytes"]
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute']:.4f} | "
+            f"{rf['t_memory']:.4f} | {rf['t_collective']:.4f} | "
+            f"{rf['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{fmt_bytes(hbm)} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = []
+    out.append(
+        "| arch | shape | mesh | status | HLO GFLOP/dev | coll bytes/dev "
+        "| temp/dev | collective mix |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("variant", "base") != "base":
+            continue
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — "
+                f"| — | {r['reason'][:48]} |"
+            )
+            continue
+        mix = ", ".join(
+            f"{k.replace('all-','a')}:{fmt_bytes(v)}"
+            for k, v in r["collectives"].items() if v > 1e6
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['hlo_flops']/1e9:.1f} | {fmt_bytes(r['collective_bytes'])} | "
+            f"{fmt_bytes(r['memory']['temp_bytes'])} | {mix[:64]} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "results", "dryrun"
+    )
+    rows = load(d)
+    which = sys.argv[2] if len(sys.argv) > 2 else "both"
+    if which in ("both", "roofline"):
+        print("### Single-pod (16x16) roofline\n")
+        print(roofline_table(rows))
+    if which in ("both", "dryrun"):
+        print("\n### Dry-run cells\n")
+        print(dryrun_table(rows))

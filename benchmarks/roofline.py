@@ -1,0 +1,46 @@
+"""§Roofline: read the dry-run artifacts and emit the per-cell three-term
+analysis (compute / memory / collective seconds, dominant term, MODEL_FLOPS
+usefulness ratio)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def main(mesh: str = "16x16"):
+    if not os.path.isdir(RESULTS):
+        emit("roofline/missing", 0.0, "run python -m repro.launch.dryrun --all")
+        return
+    rows = []
+    for fn in sorted(os.listdir(RESULTS)):
+        if not fn.endswith(f"{mesh}.json"):
+            continue
+        with open(os.path.join(RESULTS, fn)) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        step_time = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        emit(
+            f"roofline/{r['arch']}__{r['shape']}", step_time * 1e6,
+            f"dom={rf['dominant']} comp={rf['t_compute']*1e3:.2f}ms "
+            f"mem={rf['t_memory']*1e3:.2f}ms coll={rf['t_collective']*1e3:.2f}ms "
+            f"useful={r['useful_flops_ratio']:.3f}",
+        )
+        rows.append(r)
+    if rows:
+        doms = [r["roofline"]["dominant"] for r in rows]
+        emit(
+            "roofline/summary", float(len(rows)),
+            f"cells={len(rows)} compute-bound={doms.count('compute')} "
+            f"memory-bound={doms.count('memory')} "
+            f"collective-bound={doms.count('collective')}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 3 + §8.3: sensitivity to effective cache size, with the
+GRD-G / GRD-GC ablation.
+
+GRD-G  = regathering but no real cache headroom (cache ~ one partition):
+         every gather re-reads partitions from storage.
+GRD-GC = regathering + partition-wise layer caching (full GriNNder).
+HongTu = snapshot engine at the same budget."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_workload, run_engine_epoch
+
+
+def main(hiddens=(32, 64, 128)):
+    for h in hiddens:
+        wl = make_workload(
+            n_nodes=16000, n_layers=3, d_feat=h, d_hidden=h, n_parts=16
+        )
+        D = wl["g"].n_nodes * h * 4
+        settings = {
+            "hongtu": ("snapshot", int(2.5 * D)),
+            "grd_g": ("regather", int(0.15 * D)),   # cache ~ 1 partition
+            "grd_gc": ("regather", int(2.5 * D)),   # layer-wise cache
+        }
+        for tag, (mode, cache) in settings.items():
+            wall, mt, c, _ = run_engine_epoch(wl, mode, cache)
+            hit = c.cache_hits / max(c.cache_hits + c.cache_misses, 1)
+            emit(
+                f"table3/{tag}_h{h}", wall * 1e6,
+                f"modeled={mt.overlapped*1e3:.1f}ms hit={hit:.2f} "
+                f"storageIO={(c.storage_read_bytes+c.storage_write_bytes)/1e6:.0f}MB "
+                f"peak_host={c.cache_peak_bytes/1e6:.0f}MB",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Quickstart: storage-offloaded full-graph GNN training in ~60 lines.
+
+Builds a power-law synthetic graph, partitions it with switching-aware
+partitioning, trains a 3-layer GCN with the GriNNder regather engine, and
+verifies the loss curve matches in-memory autodiff exactly.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Counters, HostCache, SSOEngine, StorageTier, build_plan
+from repro.graph import (
+    gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
+)
+from repro.graph.csr import add_self_loops
+from repro.graph.synthetic import random_features, random_labels
+from repro.models.gnn.layers import full_graph_loss, full_graph_topo, get_gnn
+from repro.optim.adamw import sgd_update
+
+
+def main():
+    # 1. graph + partitioning (the paper's lightweight partitioner)
+    g = add_self_loops(kronecker_graph(5000, 10, seed=0))
+    res = switching_aware_partition(g, n_parts=8, max_iters=20)
+    plan = build_plan(g, res.parts, 8, edge_weight=gcn_norm_coeffs(g))
+    print(f"graph: {g.n_nodes} nodes / {g.n_edges} edges, "
+          f"alpha={plan.alpha:.2f}, partitioner peak mem "
+          f"{res.total_bytes/1e6:.1f}MB")
+
+    # 2. data + model
+    X = random_features(g.n_nodes, 64, 0)[plan.ro.perm]
+    Y = random_labels(g.n_nodes, 10, 0)[plan.ro.perm]
+    spec = get_gnn("gcn")
+    dims = [64, 64, 64, 10]
+    params = spec.init(jax.random.PRNGKey(0), 64, 64, 10, 3)
+
+    # 3. the SSO engine: storage tier + partition-wise host cache
+    c = Counters()
+    storage = StorageTier(tempfile.mkdtemp(prefix="grinnder_"), counters=c)
+    cache = HostCache(8 << 20, storage, c)  # 8 MB host budget
+    engine = SSOEngine(spec, plan, dims, storage, cache, c, mode="regather")
+    engine.initialize(X)
+
+    # 4. train offloaded; compare with in-memory oracle
+    rg = plan.ro.graph
+    topo = full_graph_topo(rg.indptr, rg.indices, rg.n_nodes, plan.edge_weight)
+    params_ref = params
+    # SGD so float-reassociation noise (~1e-6) isn't sign-amplified by Adam
+    for epoch in range(5):
+        loss, grads = engine.run_epoch(params, Y)
+        params = sgd_update(grads, params, lr=5e-2)
+        ref_loss, ref_grads = jax.value_and_grad(
+            lambda p: full_graph_loss(spec, p, jnp.asarray(X), topo,
+                                      jnp.asarray(Y))
+        )(params_ref)
+        params_ref = sgd_update(ref_grads, params_ref, lr=5e-2)
+        print(f"epoch {epoch}: offloaded={loss:.5f} "
+              f"in-memory={float(ref_loss):.5f} "
+              f"(match: {abs(loss-float(ref_loss)) < 1e-4})")
+
+    print(f"\nI/O: storage read {c.storage_read_bytes/1e6:.1f}MB / write "
+          f"{c.storage_write_bytes/1e6:.1f}MB, host<->device "
+          f"{(c.h2d_bytes+c.d2h_bytes)/1e6:.1f}MB, cache hit-rate "
+          f"{c.cache_hits/(c.cache_hits+c.cache_misses):.2%}, "
+          f"peak host {c.cache_peak_bytes/1e6:.1f}MB")
+    storage.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver #2: train a ~135M-parameter two-tower retrieval model
+for a few hundred steps with the fault-tolerant loop (checkpoint/resume,
+straggler logging).
+
+Run:  PYTHONPATH=src python examples/train_two_tower.py [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.recsys.two_tower import (
+    TwoTowerConfig, init_two_tower, two_tower_loss,
+)
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.train.loop import LoopConfig, run_training_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--vocab", type=int, default=250_000)
+    ap.add_argument("--ckpt", default="/tmp/two_tower_ckpt")
+    args = ap.parse_args()
+
+    cfg = TwoTowerConfig(
+        embed_dim=256, tower_mlp=(1024, 512, 256),
+        n_user_fields=8, n_item_fields=4, bag_size=8,
+        user_vocab=args.vocab, item_vocab=args.vocab,
+    )
+    params = init_two_tower(jax.random.PRNGKey(0), cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"two-tower model: {n_params/1e6:.1f}M parameters "
+          f"(tables {2*args.vocab*cfg.embed_dim/1e6:.0f}M)")
+    opt = adamw_init(params)
+
+    rng = np.random.default_rng(0)
+
+    def batch_fn(step):
+        r = np.random.default_rng(step)  # deterministic per step (resumable)
+        base = r.integers(0, args.vocab, (args.batch,))
+        u = np.stack([base] * cfg.n_user_fields, 1)[:, :, None].repeat(
+            cfg.bag_size, 2
+        )
+        i = np.stack([base] * cfg.n_item_fields, 1)[:, :, None].repeat(
+            cfg.bag_size, 2
+        )
+        noise = r.integers(0, args.vocab, i.shape)
+        i = np.where(r.random(i.shape) < 0.3, noise, i)
+        return jnp.asarray(u.astype(np.int32)), jnp.asarray(i.astype(np.int32))
+
+    @jax.jit
+    def step_fn(p, o, batch):
+        u, i = batch
+        (loss, acc), g = jax.value_and_grad(
+            lambda pp: two_tower_loss(pp, u, i, cfg), has_aux=True
+        )(p)
+        p2, o2 = adamw_update(g, p, o, lr=1e-3)
+        return p2, o2, {"loss": loss, "acc": acc}
+
+    loop_cfg = LoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=100,
+        log_every=20,
+    )
+    params, opt, state = run_training_loop(
+        loop_cfg, params, opt, step_fn, batch_fn
+    )
+    print(f"finished at step {state.step}; loss "
+          f"{state.losses[0]:.4f} -> {state.losses[-1]:.4f}; "
+          f"stragglers: {state.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch/benchmarks.
+
+10 assigned architectures + the paper's own GCN-IGBM configuration."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ArchSpec, Cell
+
+_MODULES = [
+    "mixtral_8x7b",
+    "deepseek_v2_236b",
+    "phi3_medium_14b",
+    "command_r_plus_104b",
+    "deepseek_67b",
+    "graphsage_reddit",
+    "pna",
+    "graphcast",
+    "gcn_cora",
+    "two_tower_retrieval",
+    "gcn_igbm",
+]
+
+ASSIGNED = [
+    "mixtral-8x7b", "deepseek-v2-236b", "phi3-medium-14b",
+    "command-r-plus-104b", "deepseek-67b",
+    "graphsage-reddit", "pna", "graphcast", "gcn-cora",
+    "two-tower-retrieval",
+]
+
+
+def _load() -> Dict[str, ArchSpec]:
+    import importlib
+
+    reg = {}
+    for m in _MODULES:
+        mod = importlib.import_module(f"repro.configs.{m}")
+        reg[mod.ARCH.name] = mod.ARCH
+    return reg
+
+
+REGISTRY: Dict[str, ArchSpec] = _load()
+
+
+def get_arch(name: str) -> ArchSpec:
+    return REGISTRY[name]
+
+
+def list_cells(assigned_only: bool = True) -> List[Tuple[str, str, Cell]]:
+    """All (arch, shape, cell) combinations — 40 assigned cells."""
+    out = []
+    names = ASSIGNED if assigned_only else list(REGISTRY)
+    for name in names:
+        arch = REGISTRY[name]
+        for shape, cell in arch.cells.items():
+            out.append((name, shape, cell))
+    return out

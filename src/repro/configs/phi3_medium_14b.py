@@ -1,0 +1,21 @@
+"""phi3-medium-14b [dense]: 40L d_model=5120 40H (GQA kv=10) d_ff=17920
+vocab=100352 — RoPE SwiGLU GQA. [arXiv:2404.14219; unverified]"""
+import jax.numpy as jnp
+
+from repro.configs.builders import make_lm_arch
+from repro.models.lm.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="phi3-medium-14b",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10, d_head=128,
+    d_ff=17920, vocab=100352,
+    attn_type="gqa", rope_theta=1e4, dtype=jnp.bfloat16,
+)
+
+SMOKE = LMConfig(
+    name="phi3-smoke",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_head=8, d_ff=128,
+    vocab=256, attn_type="gqa", dtype=jnp.float32, q_chunk=16, kv_chunk=16,
+)
+
+ARCH = make_lm_arch(CONFIG, __doc__.strip(), SMOKE)

@@ -1,0 +1,14 @@
+"""two-tower-retrieval [recsys]: embed_dim=256 tower_mlp=1024-512-256
+interaction=dot — sampled-softmax retrieval. [RecSys'19 (YouTube);
+unverified]"""
+from repro.configs.builders import make_recsys_arch
+from repro.models.recsys.two_tower import TwoTowerConfig
+
+CONFIG = TwoTowerConfig(
+    name="two-tower-retrieval",
+    embed_dim=256, tower_mlp=(1024, 512, 256),
+    n_user_fields=8, n_item_fields=4, bag_size=16,
+    user_vocab=10_000_000, item_vocab=10_000_000,
+)
+
+ARCH = make_recsys_arch(CONFIG, __doc__.strip())

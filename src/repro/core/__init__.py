@@ -1,0 +1,17 @@
+"""GriNNder core: structured storage offloading (cache/(re)gather/bypass)."""
+from repro.core.counters import Counters, PhaseTimer
+from repro.core.storage import StorageTier
+from repro.core.cache import HostCache
+from repro.core.plan import PartitionPlan, WorkUnit, build_plan
+from repro.core.engine import SSOEngine
+from repro.core.costmodel import (
+    TierBandwidths, PAPER_WORKSTATION, modeled_time, ModeledTime,
+)
+from repro.core.microbatch import microbatch_grads, build_full_mfg
+
+__all__ = [
+    "Counters", "PhaseTimer", "StorageTier", "HostCache",
+    "PartitionPlan", "WorkUnit", "build_plan", "SSOEngine",
+    "TierBandwidths", "PAPER_WORKSTATION", "modeled_time", "ModeledTime",
+    "microbatch_grads", "build_full_mfg",
+]

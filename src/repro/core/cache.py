@@ -1,0 +1,201 @@
+"""Partition-wise host-memory cache (paper §4).
+
+Entries are keyed ``(kind, layer, partition)`` and hold one partition's rows
+of one layer's activations/gradients. Replacement policy follows the paper's
+hierarchy:
+
+  1. with ample budget, whole layers stay resident (maximal intra-layer reuse);
+  2. under pressure, evict entire layers in LRU order (layer recency = most
+     recent touch of any partition of that layer);
+  3. if a single layer exceeds the budget, degrade gracefully to
+     partition-granular LRU eviction.
+
+Dirty entries (gradient write-back buffers — the paper's "host memory as a
+write-back buffer", §3) are flushed to the storage tier on eviction.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.counters import Counters
+from repro.core.storage import StorageTier
+
+Key = Tuple[str, int, int]  # (kind, layer, partition)
+
+
+class _Entry:
+    __slots__ = ("arr", "tick", "dirty", "pinned", "spill_name", "spill_row0")
+
+    def __init__(self, arr, tick, dirty=False, pinned=False,
+                 spill_name=None, spill_row0=0):
+        self.arr = arr
+        self.tick = tick
+        self.dirty = dirty
+        self.pinned = pinned
+        self.spill_name = spill_name  # storage target on dirty eviction
+        self.spill_row0 = spill_row0
+
+
+class HostCache:
+    def __init__(
+        self,
+        budget_bytes: int,
+        storage: StorageTier,
+        counters: Optional[Counters] = None,
+    ):
+        self.budget = int(budget_bytes)
+        self.storage = storage
+        self.counters = counters or storage.counters
+        self._entries: Dict[Key, _Entry] = {}
+        self._bytes = 0
+        self._tick = 0
+        self._lock = threading.RLock()
+
+    # -- internals ----------------------------------------------------------
+    def _touch(self, e: _Entry) -> None:
+        self._tick += 1
+        e.tick = self._tick
+
+    def _evict_entry(self, key: Key) -> None:
+        e = self._entries.pop(key)
+        if e.dirty and e.spill_name is not None:
+            self.storage.write_rows(e.spill_name, e.spill_row0, e.arr)
+        self._bytes -= e.arr.nbytes
+        self.counters.cache_evictions += 1
+
+    def _layer_recency(self) -> Dict[Tuple[str, int], int]:
+        rec: Dict[Tuple[str, int], int] = {}
+        for (kind, layer, _), e in self._entries.items():
+            k = (kind, layer)
+            rec[k] = max(rec.get(k, -1), e.tick)
+        return rec
+
+    def _make_room(self, need: int) -> bool:
+        """Free space for `need` bytes. Returns False if impossible."""
+        if need > self.budget:
+            return False
+        # phase 1: evict whole layers, least-recently-used layer first
+        while self._bytes + need > self.budget:
+            rec = self._layer_recency()
+            evictable_layers = [
+                kl for kl in sorted(rec, key=rec.get)
+                if any(
+                    not e.pinned
+                    for (k2, l2, _), e in self._entries.items()
+                    if (k2, l2) == kl
+                )
+            ]
+            if not evictable_layers:
+                return False
+            target = evictable_layers[0]
+            keys = [
+                k for k, e in self._entries.items()
+                if (k[0], k[1]) == target and not e.pinned
+            ]
+            # single-layer-overflow degradation: partition-wise LRU inside
+            # the layer instead of dropping it wholesale
+            keys.sort(key=lambda k: self._entries[k].tick)
+            for k in keys:
+                self._evict_entry(k)
+                if self._bytes + need <= self.budget:
+                    break
+        return True
+
+    # -- API ----------------------------------------------------------------
+    @property
+    def used_bytes(self) -> int:
+        return self._bytes
+
+    def get(
+        self,
+        key: Key,
+        loader: Callable[[], np.ndarray],
+    ) -> np.ndarray:
+        """Fetch a partition block, loading through the cache on miss.
+
+        If the block cannot fit even after eviction, it streams through
+        uncached (counted as bypass)."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:
+                self.counters.cache_hits += 1
+                self._touch(e)
+                return e.arr
+            self.counters.cache_misses += 1
+            arr = loader()
+            if self._make_room(arr.nbytes):
+                self._tick += 1
+                self._entries[key] = _Entry(arr, self._tick)
+                self._bytes += arr.nbytes
+            else:
+                self.counters.cache_bypass += 1
+            self.counters.sample_memory(self._bytes)
+            return arr
+
+    def put(
+        self,
+        key: Key,
+        arr: np.ndarray,
+        dirty: bool = False,
+        pinned: bool = False,
+        spill_name: Optional[str] = None,
+        spill_row0: int = 0,
+    ) -> bool:
+        """Insert (e.g. gradient write-back buffer). Returns False if the
+        entry could not be cached (caller must handle, e.g. direct storage)."""
+        with self._lock:
+            if key in self._entries:
+                self._evict_silent(key)
+            if not self._make_room(arr.nbytes):
+                return False
+            self._tick += 1
+            self._entries[key] = _Entry(
+                arr, self._tick, dirty=dirty, pinned=pinned,
+                spill_name=spill_name, spill_row0=spill_row0,
+            )
+            self._bytes += arr.nbytes
+            self.counters.sample_memory(self._bytes)
+            return True
+
+    def _evict_silent(self, key: Key) -> None:
+        e = self._entries.pop(key)
+        self._bytes -= e.arr.nbytes
+
+    def peek(self, key: Key) -> Optional[np.ndarray]:
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                return None
+            self._touch(e)
+            return e.arr
+
+    def contains(self, key: Key) -> bool:
+        return key in self._entries
+
+    def unpin(self, key: Key) -> None:
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:
+                e.pinned = False
+
+    def drop(self, key: Key, flush: bool = True) -> None:
+        with self._lock:
+            if key in self._entries:
+                if flush:
+                    self._evict_entry(key)
+                else:
+                    self._evict_silent(key)
+
+    def drop_layer(self, kind: str, layer: int, flush: bool = True) -> None:
+        with self._lock:
+            keys = [k for k in self._entries if k[0] == kind and k[1] == layer]
+            for k in keys:
+                self.drop(k, flush=flush)
+
+    def flush_all(self) -> None:
+        with self._lock:
+            for k in list(self._entries):
+                self._evict_entry(k)

@@ -1,0 +1,81 @@
+"""Byte/op telemetry for the SSO engine.
+
+These counters are the measurement substrate for the paper-claim validations:
+Table 6/7 (I/O volume & memory footprint), §8.4 (host memory usage), §8.9
+(storage write volume), and the tier-bandwidth cost model used to reproduce
+Table 1/2/3 speedup ratios on non-GPU hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict
+
+
+@dataclasses.dataclass
+class Counters:
+    # storage tier (logical + page-granular physical)
+    storage_read_bytes: int = 0
+    storage_write_bytes: int = 0
+    storage_read_paged_bytes: int = 0
+    storage_write_paged_bytes: int = 0
+    storage_read_ops: int = 0
+    storage_write_ops: int = 0
+    # host <-> device (the paper's PCIe path; TPU host link here)
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    # host-side gather/scatter work
+    host_gather_bytes: int = 0
+    host_scatter_bytes: int = 0
+    # cache behaviour
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    cache_bypass: int = 0
+    cache_peak_bytes: int = 0
+    # device compute (flop estimate filled by engine when available)
+    device_flops: int = 0
+
+    def __post_init__(self):
+        self.phase_seconds: Dict[str, float] = defaultdict(float)
+        self._mem_timeline = []  # (t, cache_bytes) samples for Fig-9 style plots
+
+    def record_phase(self, name: str, seconds: float) -> None:
+        self.phase_seconds[name] += seconds
+
+    def sample_memory(self, cache_bytes: int) -> None:
+        self.cache_peak_bytes = max(self.cache_peak_bytes, cache_bytes)
+        self._mem_timeline.append((time.perf_counter(), cache_bytes))
+
+    @property
+    def memory_timeline(self):
+        return list(self._mem_timeline)
+
+    def snapshot(self) -> Dict[str, float]:
+        d = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+        }
+        d.update({f"t_{k}": v for k, v in self.phase_seconds.items()})
+        return d
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+        self.phase_seconds.clear()
+        self._mem_timeline.clear()
+
+
+class PhaseTimer:
+    def __init__(self, counters: Counters, name: str):
+        self.counters = counters
+        self.name = name
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.counters.record_phase(self.name, time.perf_counter() - self.t0)
+        return False

@@ -1,0 +1,375 @@
+"""Structured Storage Offloading engine (paper §3–§5).
+
+Implements the cache-(re)gather-bypass workflow with two gradient engines:
+
+- ``mode="regather"`` (GriNNder): forward persists only the canonical
+  per-layer activation array ``A^l`` (bypass-written to storage); the backward
+  *regathers* ``GA_p^{l-1}`` just-in-time from the partition cache and lets
+  ``jax.vjp`` recompute the layer intermediates — no snapshots, no α-fold
+  amplification.
+- ``mode="snapshot"`` (HongTu baseline): forward additionally persists every
+  partition's gathered activations ``GA_p^{l-1}``; the backward reads the
+  snapshot. Numerically identical, α× more I/O and host footprint.
+
+Both engines drive the same pure layer functions (models/gnn/layers.py), so
+gradient equality against whole-graph ``jax.grad`` is exact up to float
+reassociation — the paper's "no algorithm change" property (Appendix W).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import HostCache
+from repro.core.counters import Counters, PhaseTimer
+from repro.core.plan import PartitionPlan, WorkUnit
+from repro.core.storage import StorageTier
+from repro.models.gnn.layers import GNNSpec, LocalTopo
+
+
+def _act_name(layer: int) -> str:
+    return f"act{layer}"
+
+
+def _grad_name(layer: int) -> str:
+    return f"grad{layer}"
+
+
+def _snap_name(layer: int, p: int) -> str:
+    return f"snap{layer}_{p}"
+
+
+class SSOEngine:
+    def __init__(
+        self,
+        spec: GNNSpec,
+        plan: PartitionPlan,
+        dims: Sequence[int],              # [d_in, d_h1, ..., d_out]
+        storage: StorageTier,
+        cache: HostCache,
+        counters: Optional[Counters] = None,
+        mode: str = "regather",
+        overlap: bool = False,
+        dtype=np.float32,
+    ):
+        assert mode in ("regather", "snapshot")
+        self.spec = spec
+        self.plan = plan
+        self.dims = list(dims)
+        self.n_layers = len(dims) - 1
+        self.storage = storage
+        self.cache = cache
+        self.counters = counters or storage.counters
+        self.mode = mode
+        self.overlap = overlap
+        self.dtype = np.dtype(dtype)
+        self._materialized_grads: set = set()
+        self._pool = (
+            cf.ThreadPoolExecutor(max_workers=1) if overlap else None
+        )
+        self._jit_fwd = {}
+        self._jit_bwd = {}
+        self._jit_loss = None
+
+    # ------------------------------------------------------------------ jit
+    def _fwd(self, activate: bool):
+        if activate not in self._jit_fwd:
+            apply = self.spec.apply_layer
+
+            @jax.jit
+            def f(params_l, ga, topo):
+                return apply(params_l, ga, topo, activate=activate)
+
+            self._jit_fwd[activate] = f
+        return self._jit_fwd[activate]
+
+    def _bwd(self, activate: bool):
+        if activate not in self._jit_bwd:
+            apply = self.spec.apply_layer
+
+            @jax.jit
+            def f(params_l, ga, topo, d_out):
+                def g(p, a):
+                    return apply(p, a, topo, activate=activate)
+
+                _, vjp = jax.vjp(g, params_l, ga)
+                dp, dga = vjp(d_out)
+                return dp, dga
+
+            self._jit_bwd[activate] = f
+        return self._jit_bwd[activate]
+
+    def _loss_grad(self):
+        if self._jit_loss is None:
+
+            @jax.jit
+            def f(logits, labels, n_total):
+                mask = (labels >= 0).astype(logits.dtype)
+
+                def loss_fn(lg):
+                    logp = jax.nn.log_softmax(lg, axis=-1)
+                    ll = jnp.take_along_axis(
+                        logp,
+                        jnp.maximum(labels, 0)[:, None].astype(jnp.int32),
+                        axis=-1,
+                    )[:, 0]
+                    return -(ll * mask).sum() / n_total
+
+                return jax.value_and_grad(loss_fn)(logits)
+
+            self._jit_loss = f
+        return self._jit_loss
+
+    # -------------------------------------------------------------- storage
+    def initialize(self, x_reordered: np.ndarray) -> None:
+        """Write input features (already permuted by plan.ro.perm) to storage
+        partition-wise, alloc per-layer activation files."""
+        n = self.plan.n_nodes
+        st = self.storage
+        for l, d in enumerate(self.dims):
+            name = _act_name(l)
+            if st.exists(name):
+                st.free(name)
+            st.alloc(name, (n, d), self.dtype)
+        for p in range(self.plan.n_parts):
+            u = self.plan.unit(p)
+            st.write_rows(_act_name(0), u.v0, x_reordered[u.v0 : u.v1])
+        if self.mode == "snapshot":
+            for l in range(self.n_layers):
+                for p in range(self.plan.n_parts):
+                    u = self.plan.unit(p)
+                    name = _snap_name(l, p)
+                    if st.exists(name):
+                        st.free(name)
+                    st.alloc(name, (u.n_req, self.dims[l]), self.dtype)
+
+    # --------------------------------------------------------------- gather
+    def _load_part_block(self, layer: int, q: int) -> np.ndarray:
+        a0, a1 = self.plan.ro.partition_slice(q)
+        return self.storage.read_rows(_act_name(layer), a0, a1)
+
+    def _gather(self, layer: int, u: WorkUnit, pad_rows: int) -> np.ndarray:
+        """Assemble GA_p^{layer} from the partition cache (paper's host-side
+        gather: one sequential run per source partition)."""
+        d = self.dims[layer]
+        buf = np.zeros((pad_rows, d), self.dtype)
+        ptr = u.req_part_ptr
+        for q in u.req_parts:
+            block = self.cache.get(
+                ("act", layer, int(q)),
+                loader=partial(self._load_part_block, layer, int(q)),
+            )
+            a0, _ = self.plan.ro.partition_slice(int(q))
+            rows = u.req_global[ptr[q] : ptr[q + 1]] - a0
+            buf[ptr[q] : ptr[q + 1]] = block[rows]
+        self.counters.host_gather_bytes += u.n_req * d * self.dtype.itemsize
+        return buf
+
+    def _prefetch(self, layer: int, u: WorkUnit) -> None:
+        for q in u.req_parts:
+            self.cache.get(
+                ("act", layer, int(q)),
+                loader=partial(self._load_part_block, layer, int(q)),
+            )
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params: List) -> None:
+        sched = self.plan.schedule
+        for l in range(self.n_layers):
+            fwd = self._fwd(activate=(l < self.n_layers - 1))
+            d_out = self.dims[l + 1]
+            for i, p in enumerate(sched):
+                u = self.plan.unit(p)
+                # gather from cache (+ optional overlap prefetch of next unit)
+                fut = None
+                if self._pool is not None and i + 1 < len(sched):
+                    nxt = self.plan.unit(sched[i + 1])
+                    fut = self._pool.submit(self._prefetch, l, nxt)
+                with PhaseTimer(self.counters, "gather"):
+                    ga = self._gather_padded(l, u)
+                with PhaseTimer(self.counters, "compute_fwd"):
+                    ga_dev = jnp.asarray(ga)
+                    self.counters.h2d_bytes += ga.nbytes
+                    out = fwd(params[l], ga_dev, u.topo)
+                    out_np = np.asarray(out[: u.n_dst])
+                    self.counters.d2h_bytes += out_np.nbytes
+                if self.mode == "snapshot":
+                    # HongTu: persist GA for the backward pass (α-amplified).
+                    # The snapshot is offloaded from the device, so it transits
+                    # the device<->host link (paper Table 6: (2α+1)D forward).
+                    self.counters.d2h_bytes += u.n_req * ga.shape[1] * self.dtype.itemsize
+                    self._snapshot_put(l, p, ga[: u.n_req])
+                with PhaseTimer(self.counters, "bypass_write"):
+                    # bypass: output activations go straight to storage
+                    self.storage.write_rows(_act_name(l + 1), u.v0, out_np)
+                if fut is not None:
+                    fut.result()
+            # next layer reads act{l+1}; act{l} only needed again in backward
+
+    def _gather_padded(self, layer: int, u: WorkUnit) -> np.ndarray:
+        return self._gather(layer, u, u.r_pad)
+
+    # ------------------------------------------------------------ snapshots
+    def _snapshot_put(self, layer: int, p: int, ga_real: np.ndarray) -> None:
+        name = _snap_name(layer, p)
+        ok = self.cache.put(
+            ("snap", layer, p), ga_real, dirty=True, spill_name=name
+        )
+        if not ok:
+            self.storage.write_rows(name, 0, ga_real)
+            self._materialized_grads.add(("snapdisk", layer, p))
+
+    def _snapshot_get(self, layer: int, p: int, u: WorkUnit) -> np.ndarray:
+        arr = self.cache.peek(("snap", layer, p))
+        if arr is None:
+            arr = self.storage.read_rows(_snap_name(layer, p), 0, u.n_req)
+            self.counters.cache_misses += 1
+        else:
+            self.counters.cache_hits += 1
+        buf = np.zeros((u.r_pad, arr.shape[1]), self.dtype)
+        buf[: arr.shape[0]] = arr
+        return buf
+
+    # ------------------------------------------------------- grad write-back
+    def _grad_accumulate(
+        self, layer: int, q: int, rows_local: np.ndarray, values: np.ndarray
+    ) -> None:
+        """Scatter-accumulate ∇A^{layer} rows for source partition q (the
+        paper's host write-back buffer with storage spill)."""
+        key = ("grad", layer, q)
+        a0, a1 = self.plan.ro.partition_slice(q)
+        name = _grad_name(layer)
+        buf = self.cache.peek(key)
+        if buf is None:
+            if ("gradmat", layer, q) in self._materialized_grads:
+                buf = self.storage.read_rows(name, a0, a1)
+            else:
+                buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
+                self._materialized_grads.add(("gradmat", layer, q))
+            ok = self.cache.put(
+                key, buf, dirty=True, spill_name=name, spill_row0=a0
+            )
+            if not ok:
+                # degraded mode: direct read-modify-write on storage
+                np.add.at(buf, rows_local, values)
+                self.storage.write_rows(name, a0, buf)
+                self.counters.host_scatter_bytes += values.nbytes
+                return
+        np.add.at(buf, rows_local, values)
+        self.counters.host_scatter_bytes += values.nbytes
+
+    def _grad_fetch(self, layer: int, p: int) -> np.ndarray:
+        """Read ∇A^{layer} for destination partition p (padded to topo rows)."""
+        u = self.plan.unit(p)
+        key = ("grad", layer, p)
+        a0, a1 = u.v0, u.v1
+        buf = self.cache.peek(key)
+        if buf is None:
+            if ("gradmat", layer, p) in self._materialized_grads:
+                buf = self.storage.read_rows(_grad_name(layer), a0, a1)
+            else:
+                buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
+        d_pad = u.d_pad
+        out = np.zeros((d_pad, self.dims[layer]), self.dtype)
+        out[: u.n_dst] = buf
+        return out
+
+    # ------------------------------------------------------------- backward
+    def backward(self, params: List, labels_reordered: np.ndarray):
+        """Returns (loss, grads) where grads is a list of per-layer pytrees."""
+        plan, st = self.plan, self.storage
+        n = plan.n_nodes
+        L = self.n_layers
+        loss_fn = self._loss_grad()
+        # grad files per layer (lazily zero-filled via materialization set)
+        for l in range(L + 1):
+            name = _grad_name(l)
+            if st.exists(name):
+                st.free(name)
+            st.alloc(name, (n, self.dims[l]), self.dtype)
+        self._materialized_grads.clear()
+
+        # ---- loss layer: dL/dA^L per partition
+        total_loss = 0.0
+        for p in plan.schedule:
+            u = plan.unit(p)
+            logits = st.read_rows(_act_name(L), u.v0, u.v1)
+            lab = labels_reordered[u.v0 : u.v1].astype(np.int32)
+            d_pad = u.d_pad
+            lg = np.zeros((d_pad, self.dims[L]), self.dtype)
+            lg[: u.n_dst] = logits
+            lb = np.full((d_pad,), -1, np.int32)
+            lb[: u.n_dst] = lab
+            self.counters.h2d_bytes += lg.nbytes
+            loss_p, dlog = loss_fn(
+                jnp.asarray(lg), jnp.asarray(lb), jnp.float32(n)
+            )
+            total_loss += float(loss_p)
+            dlog_np = np.asarray(dlog[: u.n_dst])
+            self.counters.d2h_bytes += dlog_np.nbytes
+            self._grad_accumulate(
+                L, p, np.arange(u.n_dst), dlog_np
+            )
+
+        # ---- layers L..1
+        grads: List = [None] * L
+        for l in range(L - 1, -1, -1):
+            bwd = self._bwd(activate=(l < L - 1))
+            dW_acc = None
+            for p in plan.schedule:
+                u = plan.unit(p)
+                with PhaseTimer(self.counters, "grad_fetch"):
+                    d_out = self._grad_fetch(l + 1, p)
+                if self.mode == "regather":
+                    with PhaseTimer(self.counters, "regather"):
+                        ga = self._gather_padded(l, u)
+                else:
+                    ga = self._snapshot_get(l, p, u)
+                with PhaseTimer(self.counters, "compute_bwd"):
+                    self.counters.h2d_bytes += ga.nbytes + d_out.nbytes
+                    dp, dga = bwd(
+                        params[l], jnp.asarray(ga), u.topo, jnp.asarray(d_out)
+                    )
+                    dW_acc = (
+                        dp
+                        if dW_acc is None
+                        else jax.tree.map(jnp.add, dW_acc, dp)
+                    )
+                    dga_np = np.asarray(dga[: u.n_req])
+                    self.counters.d2h_bytes += dga_np.nbytes
+                if l > 0:
+                    # scatter ∇GA rows back to their source partitions
+                    with PhaseTimer(self.counters, "scatter"):
+                        ptr = u.req_part_ptr
+                        for q in u.req_parts:
+                            a0, _ = plan.ro.partition_slice(int(q))
+                            rows = u.req_global[ptr[q] : ptr[q + 1]] - a0
+                            self._grad_accumulate(
+                                l, int(q), rows, dga_np[ptr[q] : ptr[q + 1]]
+                            )
+            grads[l] = jax.tree.map(np.asarray, dW_acc)
+            # drop consumed grad layer l+1 from cache & storage
+            self.cache.drop_layer("grad", l + 1, flush=False)
+            st.free(_grad_name(l + 1))
+            if self.mode == "snapshot":
+                self.cache.drop_layer("snap", l, flush=False)
+        self.cache.drop_layer("grad", 0, flush=False)
+        st.free(_grad_name(0))
+        return total_loss, grads
+
+    # ----------------------------------------------------------------- step
+    def run_epoch(self, params: List, labels_reordered: np.ndarray):
+        with PhaseTimer(self.counters, "epoch"):
+            self.forward(params)
+            loss, grads = self.backward(params, labels_reordered)
+        return loss, grads
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)

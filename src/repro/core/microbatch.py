@@ -1,0 +1,135 @@
+"""Micro-batch full-graph training baseline (Betty, ASPLOS'23 — paper §2/App.B).
+
+Accumulates gradients over message-flow graphs (MFGs) that retain ALL neighbor
+information across all layers (no sampling), followed by a single weight
+update. Exhibits the neighbor-explosion failure mode: the innermost hop's node
+set approaches |V| even for modest L, which is what the paper's Table 1 shows
+as GPU OOM / slowdowns. Peak MFG size is surfaced so benchmarks can report the
+explosion factor.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.models.gnn.layers import GNNSpec, LocalTopo, softmax_xent
+
+
+def _full_hop(
+    g: CSRGraph, dst_ids: np.ndarray, edge_weight: Optional[np.ndarray]
+):
+    """All in-edges of dst_ids: (node_ids, src_local, dst_local, ew, deg)."""
+    deg = (g.indptr[dst_ids + 1] - g.indptr[dst_ids]).astype(np.int64)
+    e_slices = [
+        np.arange(g.indptr[v], g.indptr[v + 1], dtype=np.int64) for v in dst_ids
+    ]
+    epos = (
+        np.concatenate(e_slices) if e_slices else np.zeros(0, np.int64)
+    )
+    srcs = g.indices[epos].astype(np.int64)
+    dst_local = np.repeat(np.arange(len(dst_ids), dtype=np.int64), deg)
+    uniq = np.unique(np.concatenate([dst_ids, srcs]))
+    # dst first ordering
+    extra = np.setdiff1d(uniq, dst_ids, assume_unique=False)
+    node_ids = np.concatenate([dst_ids, extra])
+    lut = np.full(g.n_nodes, -1, np.int64)
+    lut[node_ids] = np.arange(len(node_ids))
+    src_local = lut[srcs]
+    ew = (
+        edge_weight[epos].astype(np.float32)
+        if edge_weight is not None
+        else np.ones(len(epos), np.float32)
+    )
+    return node_ids, src_local, dst_local, ew, deg
+
+
+def build_full_mfg(
+    g: CSRGraph,
+    seeds: np.ndarray,
+    n_layers: int,
+    edge_weight: Optional[np.ndarray] = None,
+) -> Tuple[List[dict], np.ndarray]:
+    """L hops of full-neighborhood expansion, innermost first."""
+    hops = []
+    dst = np.asarray(seeds, dtype=np.int64)
+    for _ in range(n_layers):
+        node_ids, src_local, dst_local, ew, deg = _full_hop(g, dst, edge_weight)
+        hops.append(
+            dict(
+                node_ids=node_ids,
+                n_dst=len(dst),
+                src=src_local,
+                dst=dst_local,
+                ew=ew,
+                deg=np.maximum(deg, 1).astype(np.float32),
+            )
+        )
+        dst = node_ids
+    hops.reverse()
+    return hops, np.asarray(seeds, dtype=np.int64)
+
+
+def _hop_topo(h: dict) -> LocalTopo:
+    e = len(h["src"])
+    n_dst = h["n_dst"]
+    return LocalTopo(
+        src=jnp.asarray(h["src"], jnp.int32),
+        dst=jnp.asarray(h["dst"], jnp.int32),
+        n_dst=n_dst,
+        edge_weight=jnp.asarray(h["ew"]),
+        edge_mask=jnp.ones((e,), jnp.float32),
+        in_deg=jnp.asarray(h["deg"]),
+        dst_self=jnp.arange(n_dst, dtype=jnp.int32),
+    )
+
+
+def mfg_forward(spec: GNNSpec, params: List, x_in, hops: List[dict]):
+    h = x_in
+    for i, hop in enumerate(hops):
+        topo = _hop_topo(hop)
+        h = spec.apply_layer(
+            params[i], h, topo, activate=(i < len(hops) - 1)
+        )
+    return h
+
+
+def microbatch_grads(
+    spec: GNNSpec,
+    params: List,
+    g: CSRGraph,
+    x: np.ndarray,
+    labels: np.ndarray,
+    n_micro: int,
+    edge_weight: Optional[np.ndarray] = None,
+):
+    """Betty-style epoch: grads accumulated over micro-batches.
+
+    Returns (loss, grads, stats) with stats["peak_input_nodes"] showing the
+    neighbor explosion."""
+    n = g.n_nodes
+    n_layers = len(params)
+    seed_chunks = np.array_split(np.arange(n, dtype=np.int64), n_micro)
+    grads = None
+    total_loss = 0.0
+    peak_nodes = 0
+    peak_edges = 0
+    for seeds in seed_chunks:
+        hops, _ = build_full_mfg(g, seeds, n_layers, edge_weight)
+        peak_nodes = max(peak_nodes, len(hops[0]["node_ids"]))
+        peak_edges = max(peak_edges, sum(len(h["src"]) for h in hops))
+        x_in = jnp.asarray(x[hops[0]["node_ids"]])
+        lab = jnp.asarray(labels[seeds].astype(np.int32))
+
+        def loss_fn(p):
+            logits = mfg_forward(spec, p, x_in, hops)
+            return softmax_xent(logits, lab, n_total=n)
+
+        l, gr = jax.value_and_grad(loss_fn)(params)
+        total_loss += float(l)
+        grads = gr if grads is None else jax.tree.map(jnp.add, grads, gr)
+    stats = dict(peak_input_nodes=peak_nodes, peak_mfg_edges=peak_edges)
+    return total_loss, grads, stats

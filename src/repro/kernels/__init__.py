@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each subpackage ships: <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper + format helpers), ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; the TPU target is v5e (128-aligned MXU
+tiles, HBM->VMEM streaming via BlockSpec index maps / scalar prefetch).
+
+- bsr_spmm:         partition-pair block-sparse aggregation (SSO hot path)
+- edge_softmax:     GAT segment softmax over padded per-block edge tiles
+- embedding_bag:    recsys gather-reduce with scalar-prefetched row DMAs
+- flash_attention:  online-softmax attention (GQA + sliding window)
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.bsr_spmm.ops import bsr_spmm, blockify_edges
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref, spmm_edges_ref
+
+__all__ = ["bsr_spmm", "blockify_edges", "bsr_spmm_ref", "spmm_edges_ref"]

@@ -1,0 +1,4 @@
+from repro.kernels.edge_softmax.ops import edge_softmax, pack_edges_by_block
+from repro.kernels.edge_softmax.ref import edge_softmax_ref
+
+__all__ = ["edge_softmax", "pack_edges_by_block", "edge_softmax_ref"]

@@ -1,0 +1,59 @@
+"""Segment (edge) softmax Pallas kernel — the GAT attention normalizer.
+
+Edges are packed per destination-node block (128 dst rows per block, padded
+edge tiles). Per grid step one dst block's edge tile sits in VMEM; the
+per-destination max/sum reductions run over a one-hot (E_tile, 128)
+membership matrix — VPU-friendly masked reductions instead of scatter
+(TPU adaptation of the CUDA segment-softmax; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(score_ref, dstloc_ref, mask_ref, out_ref, *, block: int):
+    s = score_ref[0]            # (E_t, H)
+    dst = dstloc_ref[0]         # (E_t,)
+    m = mask_ref[0]             # (E_t,)
+    E_t, H = s.shape
+    onehot = (
+        dst[:, None] == jax.lax.broadcasted_iota(jnp.int32, (E_t, block), 1)
+    )  # (E_t, block)
+    onehot = jnp.where(m[:, None] > 0, onehot, False)
+    # per-dst max over member edges: (block, H)
+    s_exp = jnp.where(onehot[:, :, None], s[:, None, :], NEG)
+    smax = jnp.max(s_exp, axis=0)                       # (block, H)
+    smax = jnp.maximum(smax, NEG / 2)
+    ex = jnp.exp(s - jnp.take(smax, dst, axis=0)) * m[:, None]
+    den = jnp.einsum("eb,eh->bh", onehot.astype(s.dtype), ex)
+    den = jnp.maximum(den, 1e-30)
+    out_ref[0] = ex / jnp.take(den, dst, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def edge_softmax_kernel(
+    scores: jax.Array,     # (n_blocks, E_t, H)
+    dst_local: jax.Array,  # (n_blocks, E_t) int32 in [0, block)
+    mask: jax.Array,       # (n_blocks, E_t) float32
+    block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n_blocks, E_t, H = scores.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, E_t, H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, E_t), lambda i: (i, 0)),
+            pl.BlockSpec((1, E_t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, E_t, H), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, E_t, H), scores.dtype),
+        interpret=interpret,
+    )(scores, dst_local, mask)

@@ -1,0 +1,58 @@
+"""Wrapper + edge packing for the edge_softmax kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.edge_softmax.edge_softmax import edge_softmax_kernel
+
+
+def pack_edges_by_block(
+    dst: np.ndarray, n_nodes: int, block: int = 128, tile_mult: int = 8,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Group edge indices by destination block, pad to a uniform tile.
+
+    Returns (perm (n_blocks, E_t) indices into the edge arrays,
+    dst_local (n_blocks, E_t), mask, E_t)."""
+    n_blocks = (n_nodes + block - 1) // block
+    order = np.argsort(dst // block, kind="stable")
+    counts = np.bincount(dst // block, minlength=n_blocks)
+    E_t = max(int(counts.max()), 1)
+    E_t = ((E_t + tile_mult - 1) // tile_mult) * tile_mult
+    perm = np.zeros((n_blocks, E_t), np.int64)
+    dst_local = np.zeros((n_blocks, E_t), np.int32)
+    mask = np.zeros((n_blocks, E_t), np.float32)
+    off = 0
+    for b in range(n_blocks):
+        c = counts[b]
+        idx = order[off : off + c]
+        perm[b, :c] = idx
+        dst_local[b, :c] = dst[idx] - b * block
+        mask[b, :c] = 1.0
+        off += c
+    return perm, dst_local, mask, E_t
+
+
+def edge_softmax(
+    scores: jax.Array,        # (E, H) unpacked edge scores
+    perm: jax.Array,          # (n_blocks, E_t)
+    dst_local: jax.Array,
+    mask: jax.Array,
+    block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns attn (E, H) in the original edge order."""
+    E, H = scores.shape
+    packed = scores[perm.reshape(-1)].reshape(
+        perm.shape[0], perm.shape[1], H
+    )
+    attn = edge_softmax_kernel(
+        packed, dst_local, mask, block=block, interpret=interpret
+    )
+    out = jnp.zeros((E, H), scores.dtype)
+    flat_idx = perm.reshape(-1)
+    flat_attn = attn.reshape(-1, H) * mask.reshape(-1)[:, None]
+    return out.at[flat_idx].add(flat_attn)

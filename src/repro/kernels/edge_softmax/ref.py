@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: segment softmax over incoming edges per destination."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_softmax_ref(scores, dst, n_dst, mask=None):
+    """scores (E, H), dst (E,) -> attn (E, H) normalized per dst segment."""
+    if mask is None:
+        mask = jnp.ones(scores.shape[0], scores.dtype)
+    neg = jnp.finfo(scores.dtype).min
+    s = jnp.where(mask[:, None] > 0, scores, neg)
+    smax = jax.ops.segment_max(s, dst, num_segments=n_dst)
+    smax = jnp.maximum(smax, -1e30)
+    ex = jnp.exp(scores - smax[dst]) * mask[:, None]
+    den = jax.ops.segment_sum(ex, dst, num_segments=n_dst)
+    return ex / jnp.maximum(den[dst], 1e-30)

@@ -1,0 +1,4 @@
+from repro.kernels.embedding_bag.ops import embedding_bag_kernel_call
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag_kernel_call", "embedding_bag_ref"]

@@ -1,0 +1,69 @@
+"""EmbeddingBag Pallas kernel — recsys gather-reduce hot path.
+
+Grid = (n_bags, n_D_blocks, bag_size) with bag ids scalar-prefetched: the
+BlockSpec index map turns each (bag, k) step into a single-row DMA
+``table[ids[bag, k], d_block]`` HBM->VMEM, accumulated into the bag's output
+block in VMEM (zero-init on k == 0). This is the TPU-idiomatic embedding
+lookup without SparseCore: the gather never materializes (N·D) rows in HBM,
+and rows stream through VMEM (DESIGN.md §2; JAX has no native EmbeddingBag).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, row_ref, out_ref, *, bag_size: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0] += row_ref[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d_block", "mode", "interpret")
+)
+def embedding_bag_pallas(
+    table: jax.Array,      # (V, D)
+    ids: jax.Array,        # (n_bags, bag_size) int32
+    d_block: int = 128,
+    mode: str = "sum",
+    interpret: bool = False,
+) -> jax.Array:
+    n_bags, bag_size = ids.shape
+    V, D = table.shape
+    assert D % d_block == 0
+    nD = D // d_block
+    grid = (n_bags, nD, bag_size)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # flat ids
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, d_block),
+                lambda b, j, k, ids_: (ids_[b * bag_size + k], j),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, d_block), lambda b, j, k, ids_: (b, j)),
+    )
+    out = pl.pallas_call(
+        _kernel_wrapper(bag_size),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, D), table.dtype),
+        interpret=interpret,
+    )(ids.reshape(-1), table)
+    if mode == "mean":
+        out = out / jnp.float32(bag_size).astype(table.dtype)
+    return out
+
+
+def _kernel_wrapper(bag_size: int):
+    return functools.partial(_kernel, bag_size=bag_size)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the embedding_bag kernel with padding helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag_kernel_call(
+    table: jax.Array, ids: jax.Array, mode: str = "sum",
+    d_block: int = 128, interpret: bool = True,
+) -> jax.Array:
+    V, D = table.shape
+    d_pad = ((D + d_block - 1) // d_block) * d_block
+    if d_pad != D:
+        table = jnp.pad(table, ((0, 0), (0, d_pad - D)))
+    out = embedding_bag_pallas(
+        table, ids.astype(jnp.int32), d_block=d_block, mode=mode,
+        interpret=interpret,
+    )
+    return out[:, :D]

@@ -1,0 +1,16 @@
+"""Pure-jnp EmbeddingBag oracle (take + segment_sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, mode: str = "sum"):
+    """table (V, D), ids (n_bags, bag_size) -> (n_bags, D)."""
+    n_bags, bag_size = ids.shape
+    rows = jnp.take(table, ids.reshape(-1), axis=0)
+    seg = jnp.repeat(jnp.arange(n_bags), bag_size)
+    out = jax.ops.segment_sum(rows, seg, num_segments=n_bags)
+    if mode == "mean":
+        out = out / jnp.asarray(bag_size, table.dtype)
+    return out

@@ -1,0 +1,107 @@
+"""Flash attention Pallas kernel (GQA + causal + sliding window).
+
+Grid = (B*Hkv*G, nQ, nKV), kv fastest. Online-softmax accumulators (m, l,
+acc) live in VMEM scratch, persisted across the kv sweep for one q block;
+finalized into the output block on the last kv step. Q/K/V stream
+HBM->VMEM in (q_block × d) / (kv_block × d) tiles — the MXU-aligned
+realization of models/lm/attention.chunked_attention (which is the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, causal: bool, window, q_block: int, kv_block: int, scale: float,
+    n_kv: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (q_block, D)
+    k = k_ref[0].astype(jnp.float32)          # (kv_block, D)
+    v = v_ref[0].astype(jnp.float32)          # (kv_block, Dv)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    qpos = qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 0
+    )
+    kpos = kj * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1
+    )
+    if causal:
+        s = jnp.where(qpos >= kpos, s, NEG)
+    if window is not None:
+        s = jnp.where(qpos - kpos < window, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _final():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,   # (BH, Sq, D) query heads flattened into BH
+    k: jax.Array,   # (BH, Skv, D)
+    v: jax.Array,   # (BH, Skv, Dv)
+    causal: bool = True,
+    window=None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    _, Skv, Dv = v.shape
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+    nq, nkv = Sq // q_block, Skv // kv_block
+    scale = 1.0 / np.sqrt(D)
+    kern = functools.partial(
+        _kernel, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, scale=scale, n_kv=nkv,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, q_block, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_block, Dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, Dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

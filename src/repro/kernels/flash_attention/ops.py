@@ -1,0 +1,35 @@
+"""jit'd GQA wrapper: head layout handling around the flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+
+def flash_attention(
+    q, k, v, causal: bool = True, window=None,
+    q_block: int = 128, kv_block: int = 128, interpret: bool = True,
+):
+    """q (B,Sq,Hq,D); k,v (B,Skv,Hkv,*) with Hq % Hkv == 0."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    # (B, S, Hkv, G, D) -> (B*Hkv*G, S, D); kv repeated per group
+    qf = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4).reshape(
+        B * Hkv * G, Sq, D
+    )
+    kf = jnp.repeat(
+        k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D), G, axis=0
+    )
+    vf = jnp.repeat(
+        v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, Dv), G, axis=0
+    )
+    of = flash_attention_kernel(
+        qf, kf, vf, causal=causal, window=window,
+        q_block=min(q_block, Sq), kv_block=min(kv_block, Skv),
+        interpret=interpret,
+    )
+    return of.reshape(B, Hkv, G, Sq, Dv).transpose(0, 3, 1, 2, 4).reshape(
+        B, Sq, Hq, Dv
+    )

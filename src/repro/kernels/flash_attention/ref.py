@@ -1,0 +1,27 @@
+"""Pure-jnp attention oracle (materialized scores)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal=True, window=None):
+    """q (B,Sq,Hq,D); k,v (B,Skv,Hkv,*). Returns (B,Sq,Hq,Dv)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, Dv).astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches JAX device state. The dry-run (and only the dry-run) forces 512
+host-platform placeholder devices before any JAX import — see dryrun.py.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(min(model, n // data), 1)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto,) * 2,
+    )
+
+
+# TPU v5e hardware constants used by the roofline analysis
+CHIP_PEAK_FLOPS = 197e12     # bf16 FLOP/s
+CHIP_HBM_BW = 819e9          # bytes/s
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS_PER_CHIP = 4       # 2D torus (v5e: 4 links x ~50GB/s)

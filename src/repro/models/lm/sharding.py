@@ -1,0 +1,218 @@
+"""Parameter / activation sharding rules for the production mesh.
+
+Params are 2D-sharded over ("data", "model") within a pod and replicated
+across pods (FSDP×TP inside a pod, pure DP across the slower pod axis).
+``best_spec`` greedily assigns mesh axes to the largest divisible tensor
+dims; stacked scan-layer leaves never shard their leading L axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def best_spec(
+    shape, mesh: Mesh, skip_leading: bool = False, axes=("model", "data")
+) -> P:
+    """Assign mesh axes to tensor dims, largest-divisible-first."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndim = len(shape)
+    start = 1 if (skip_leading and ndim > 1) else 0
+    assign: Dict[int, Optional[str]] = {}
+    used = set()
+    # order candidate dims by size descending
+    order = sorted(range(start, ndim), key=lambda i: -shape[i])
+    for ax in axes:
+        if ax not in sizes:
+            continue
+        n = sizes[ax]
+        for i in order:
+            if i in assign:
+                continue
+            if shape[i] % n == 0 and shape[i] >= n:
+                assign[i] = ax
+                used.add(ax)
+                break
+    spec = [assign.get(i) for i in range(ndim)]
+    return P(*spec)
+
+
+EXPERT_LEAVES = ("w_gate", "w_up", "w_down")
+
+# Megatron+FSDP layout rules, keyed by leaf name. Mesh axes must land on
+# non-contraction dims wherever possible: with an axis on a contraction dim,
+# GSPMD partial-sums and all-reduces *activation-sized* tensors (measured:
+# 4.3GB all-reduces per MLA projection in deepseek-v2 train_4k — §Perf
+# iteration 2). dims are named from the UNstacked shape; "data" on dim0 of a
+# matmul weight is ZeRO-3 (weight all-gather, cheap), "model" goes on heads/
+# ff output dims (classic TP).
+#   value = tuple of (axis, dim_index) preferences with divisibility checks
+_NAME_RULES = {
+    # attention projections (d, H, e): FSDP on d, TP on heads
+    "wq": (("data", 0), ("model", 1)),
+    "w_uq": (("data", 0), ("model", 1)),
+    # kv projections: small; FSDP only (model-replicated avoids GQA
+    # head-count divisibility issues)
+    "wk": (("data", 0),),
+    "wv": (("data", 0),),
+    "w_uk": (("data", 0), ("model", 1)),
+    "w_uv": (("data", 0), ("model", 1)),
+    "w_dq": (("data", 0),),
+    "w_dkv": (("data", 0),),
+    "w_kr": (("data", 0),),
+    # out-projection (H, e, d): TP on heads -> the one Megatron all-reduce
+    "wo": (("model", 0), ("data", 2)),
+    "w_o": (("model", 0), ("data", 2)),
+    # dense/shared FFN (d, ff) / (ff, d): TP on ff, FSDP on d
+    "shared_gate": (("data", 0), ("model", 1)),
+    "shared_up": (("data", 0), ("model", 1)),
+    "shared_down": (("model", 0), ("data", 1)),
+    # embeddings
+    "embed": (("model", 0), ("data", 1)),
+    "lm_head": (("data", 0), ("model", 1)),
+    "router": (),
+}
+# MoE expert weights (E, d, ff)/(E, ff, d): experts over data (grads then
+# reduce-scatter per owner instead of stacked all-reduce), TP on ff
+_EXPERT_RULES = {
+    # measurement-driven (§Perf deepseek-v2 iterations): model on dim1
+    # (d_model) for gate/up and on the output dim for down measured
+    # 11.3e12 coll bytes vs 14.2e12 (model@ff) and 17.2e12 (w_down@ff)
+    "w_gate": (("data", 0), ("model", 1)),
+    "w_up": (("data", 0), ("model", 1)),
+    "w_down": (("data", 0), ("model", 2)),
+}
+
+
+def param_specs(params, mesh: Mesh, megatron_rules: bool = None) -> Dict:
+    """PartitionSpec pytree matching the param pytree.
+
+    Expert-weight rules (E over data -> grads reduce-scatter per owner) are
+    always on: confirmed win on deepseek-v2 (§Perf iter 1). The full
+    Megatron attention rules are gated by REPRO_MEGATRON=1: they raised the
+    useful-FLOPs ratio on deepseek-v2 but regressed mixtral (§Perf iter 2,
+    refuted as a default)."""
+    import os
+
+    if megatron_rules is None:
+        megatron_rules = os.environ.get("REPRO_MEGATRON", "0") == "1"
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def apply_rules(rules, shape, offset):
+        spec = [None] * (len(shape))
+        for ax, dim in rules:
+            i = dim + offset
+            n = sizes.get(ax, 1)
+            if i < len(shape) and spec[i] is None and shape[i] % n == 0 \
+                    and shape[i] >= n:
+                spec[i] = ax
+        return P(*spec)
+
+    def leaf_spec(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        is_stacked = "layers" in keys
+        off = 1 if is_stacked else 0
+        if leaf.ndim <= 1:
+            return P()
+        name = keys[-1]
+        if name in _EXPERT_RULES and leaf.ndim - off == 3:
+            spec = apply_rules(_EXPERT_RULES[name], leaf.shape, off)
+            # only take the expert layout if the E dim actually sharded
+            # (mixtral: E=8 < data=16 -> fall back to the 2D best_spec)
+            if spec[off] == "data":
+                return spec
+        if megatron_rules and name in _NAME_RULES:
+            return apply_rules(_NAME_RULES[name], leaf.shape, off)
+        return best_spec(leaf.shape, mesh, skip_leading=is_stacked)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )
+
+
+def data_axes(mesh: Mesh):
+    """Batch-sharding axes: ("pod","data") on the multi-pod mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, *names):
+    """Activation sharding constraint against the ambient (set_mesh) mesh.
+
+    ``names`` per dim: None, an axis name, or a tuple of axis names. Dims
+    that don't divide the axis size are left unsharded; outside a mesh
+    context this is a no-op (CPU smoke tests). Pinning activations is what
+    keeps GSPMD in ZeRO-3 mode (gather weights) instead of resharding the
+    batch (DESIGN.md §5)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    spec = []
+    for dim, nm in zip(x.shape, names):
+        if nm is None:
+            spec.append(None)
+            continue
+        cand = nm if isinstance(nm, tuple) else (nm,)
+        axes = tuple(a for a in cand if a in sizes)
+        n = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        if axes and dim % n == 0 and dim >= n:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    while len(spec) < x.ndim:
+        spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+DB = ("pod", "data")  # batch axes
+
+
+def batch_spec(batch: int, mesh: Mesh) -> P:
+    axes = data_axes(mesh)
+    n = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)] for a in axes]))
+    if batch % n == 0:
+        return P(axes)
+    # fall back to fewer axes
+    for k in range(len(axes) - 1, 0, -1):
+        sub = axes[:k]
+        n = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)] for a in sub]))
+        if batch % n == 0:
+            return P(sub)
+    return P(None)
+
+
+def kv_cache_specs(cache, mesh: Mesh, batch: int) -> Dict:
+    """Caches (L, B, S, ...): batch over data axes when divisible, sequence
+    over "model" (always a large power of 2). For batch=1 (long-context),
+    the sequence dim takes every axis."""
+    bspec = batch_spec(batch, mesh)
+    seq_axes = (
+        ("model",) if bspec != P(None) else tuple(
+            a for a in ("pod", "data", "model") if a in mesh.axis_names
+        )
+    )
+
+    def leaf(x):
+        if x is None or x.ndim < 3 or x.shape[0] == 0:
+            return P()
+        spec = [None] * x.ndim
+        spec[1] = bspec[0] if len(bspec) else None
+        spec[2] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+        return P(*spec)
+
+    return jax.tree.map(
+        leaf, cache, is_leaf=lambda x: x is None or hasattr(x, "ndim")
+    )

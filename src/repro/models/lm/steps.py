@@ -1,0 +1,120 @@
+"""Train / prefill / decode step builders for the LM architectures.
+
+Each builder returns (step_fn, in_shardings, out_shardings, input_specs) so
+launch/dryrun.py can ``jax.jit(step, in_shardings=...).lower(*specs)`` without
+allocating anything (ShapeDtypeStruct stand-ins).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.lm.transformer import (
+    LMConfig, init_kv_cache, init_lm_params, lm_decode_step, lm_loss,
+)
+from repro.models.lm.sharding import (
+    batch_spec, kv_cache_specs, param_specs,
+)
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def abstract_params(cfg: LMConfig):
+    return jax.eval_shape(
+        lambda k: init_lm_params(k, cfg), jax.random.PRNGKey(0)
+    )
+
+
+def abstract_opt_state(cfg: LMConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(adamw_init, params)
+
+
+def make_train_step(cfg: LMConfig, mesh: Mesh, lr: float = 1e-4):
+    def train_step(params, opt_state, tokens):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, tokens, cfg), has_aux=True
+        )(params)
+        params, opt_state = adamw_update(grads, params, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "ce": ce, "aux": aux}
+
+    p_abs = abstract_params(cfg)
+    o_abs = jax.eval_shape(adamw_init, p_abs)
+    pspec = param_specs(p_abs, mesh)
+    ospec = {
+        "m": pspec, "v": pspec, "step": P(),
+    }
+    return train_step, (pspec, ospec), pspec, ospec
+
+
+def make_decode_step(cfg: LMConfig, mesh: Mesh):
+    def decode_step(params, cache, token, cache_len):
+        return lm_decode_step(params, cache, token, cache_len, cfg)
+
+    return decode_step
+
+
+def make_prefill_step(cfg: LMConfig, mesh: Mesh):
+    """Prefill = forward over the prompt; returns last-position logits.
+    (Cache materialization for serving reuses the decode cache layout; the
+    dry-run lowers the compute-dominant forward.)"""
+    from repro.models.lm.transformer import lm_forward
+
+    def prefill_step(params, tokens):
+        logits, _ = lm_forward(params, tokens, cfg)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def lm_train_inputs(cfg: LMConfig, batch: int, seq: int, mesh: Mesh):
+    """ShapeDtypeStructs + shardings for (params, opt_state, tokens)."""
+    p_abs = abstract_params(cfg)
+    o_abs = jax.eval_shape(adamw_init, p_abs)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    pspec = param_specs(p_abs, mesh)
+    shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+        {
+            "m": jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+            "v": jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+            "step": NamedSharding(mesh, P()),
+        },
+        NamedSharding(mesh, batch_spec(batch, mesh)),
+    )
+    return (p_abs, o_abs, tok), shardings
+
+
+def lm_decode_inputs(cfg: LMConfig, batch: int, seq_len: int, mesh: Mesh):
+    p_abs = abstract_params(cfg)
+    c_abs = jax.eval_shape(
+        lambda: init_kv_cache(cfg, batch, seq_len)
+    )
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+    pspec = param_specs(p_abs, mesh)
+    cspec = kv_cache_specs(c_abs, mesh, batch)
+    shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+        jax.tree.map(
+            lambda s: NamedSharding(mesh, s), cspec,
+            is_leaf=lambda x: isinstance(x, P),
+        ),
+        NamedSharding(mesh, batch_spec(batch, mesh)),
+        NamedSharding(mesh, P()),
+    )
+    return (p_abs, c_abs, tok, clen), shardings
+
+
+def lm_prefill_inputs(cfg: LMConfig, batch: int, seq: int, mesh: Mesh):
+    p_abs = abstract_params(cfg)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    pspec = param_specs(p_abs, mesh)
+    shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+        NamedSharding(mesh, batch_spec(batch, mesh)),
+    )
+    return (p_abs, tok), shardings

@@ -1,0 +1,382 @@
+"""Decoder-only transformer: GQA / sliding-window / MLA attention, dense or
+MoE FFN, scanned layers with configurable remat. Covers the five assigned LM
+architectures (Mixtral-8x7B, DeepSeek-V2-236B, Phi-3-medium, Command-R+,
+DeepSeek-67B).
+
+Layer parameters are stacked along a leading L axis and the block is a single
+``jax.lax.scan`` — one compiled layer body regardless of depth, which keeps
+multi-pod dry-run compiles tractable at 95 layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm.attention import (
+    chunked_attention, decode_attention, mla_train_attention,
+    mla_decode_attention,
+)
+from repro.models.lm.layers import apply_rope, init_dense, rmsnorm, swiglu
+from repro.models.lm.moe import MoEConfig, init_moe_params, moe_ffn
+from repro.models.lm.sharding import DB, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    attn_type: str = "gqa"          # "gqa" | "mla"
+    window: Optional[int] = None    # sliding-window attention (Mixtral)
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 1e4
+    # MLA dims (DeepSeek-V2)
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # Unroll the layer scan into a Python loop. Used by the dry-run's
+    # cost-calibration compiles: XLA cost_analysis counts a scan body once,
+    # so per-layer terms are measured on small unrolled depths and
+    # extrapolated (launch/dryrun.py).
+    unroll_layers: bool = False
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (sliding window ⇒ O(S·W))."""
+        return self.window is not None
+
+    def param_count(self) -> int:
+        c = self.vocab * self.d_model * 2  # embed + head
+        per = 2 * self.d_model             # norms
+        if self.attn_type == "gqa":
+            per += self.d_model * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+            per += self.n_heads * self.d_head * self.d_model
+        else:
+            dn, dr, dv = self.qk_nope_dim, self.qk_rope_dim, self.v_head_dim
+            per += self.d_model * self.q_lora + self.q_lora * self.n_heads * (dn + dr)
+            per += self.d_model * (self.kv_lora + dr)
+            per += self.kv_lora * self.n_heads * (dn + dv)
+            per += self.n_heads * dv * self.d_model
+        if self.moe is None:
+            per += 3 * self.d_model * self.d_ff
+        else:
+            m = self.moe
+            per += m.n_experts * 3 * self.d_model * m.d_ff_expert
+            if m.n_shared:
+                ffs = m.d_ff_shared or m.n_shared * m.d_ff_expert
+                per += 3 * self.d_model * ffs
+            per += self.d_model * m.n_experts
+        return c + per * self.n_layers
+
+    def active_param_count(self) -> int:
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        inactive = (m.n_experts - m.top_k) * 3 * self.d_model * m.d_ff_expert
+        return self.param_count() - inactive * self.n_layers
+
+
+def _init_attn(key, cfg: LMConfig, dtype):
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    if cfg.attn_type == "gqa":
+        return {
+            "wq": init_dense(ks[0], (d, cfg.n_heads, cfg.d_head), dtype=dtype),
+            "wk": init_dense(ks[1], (d, cfg.n_kv_heads, cfg.d_head), dtype=dtype),
+            "wv": init_dense(ks[2], (d, cfg.n_kv_heads, cfg.d_head), dtype=dtype),
+            "wo": init_dense(
+                ks[3], (cfg.n_heads, cfg.d_head, d),
+                scale=1.0 / np.sqrt(cfg.n_heads * cfg.d_head), dtype=dtype,
+            ),
+        }
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    H = cfg.n_heads
+    return {
+        "w_dq": init_dense(ks[0], (d, cfg.q_lora), dtype=dtype),
+        "q_norm": jnp.ones((cfg.q_lora,), dtype),
+        "w_uq": init_dense(ks[1], (cfg.q_lora, H, dn + dr), dtype=dtype),
+        "w_dkv": init_dense(ks[2], (d, cfg.kv_lora), dtype=dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora,), dtype),
+        "w_kr": init_dense(ks[3], (d, dr), dtype=dtype),
+        "w_uk": init_dense(ks[4], (cfg.kv_lora, H, dn), dtype=dtype),
+        "w_uv": init_dense(ks[5], (cfg.kv_lora, H, dv), dtype=dtype),
+        "w_o": init_dense(
+            ks[6], (H, dv, d), scale=1.0 / np.sqrt(H * dv), dtype=dtype,
+        ),
+    }
+
+
+def _init_ffn(key, cfg: LMConfig, dtype, dense_ff: Optional[int] = None):
+    if cfg.moe is not None and dense_ff is None:
+        return init_moe_params(key, cfg.d_model, cfg.moe, dtype=dtype)
+    ff = dense_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, (cfg.d_model, ff), dtype=dtype),
+        "w_up": init_dense(k2, (cfg.d_model, ff), dtype=dtype),
+        "w_down": init_dense(k3, (ff, cfg.d_model), dtype=dtype),
+    }
+
+
+def _init_layer(key, cfg: LMConfig, dtype, dense_ff=None):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": _init_attn(k1, cfg, dtype),
+        "ffn": _init_ffn(k2, cfg, dtype, dense_ff=dense_ff),
+    }
+
+
+def init_lm_params(key, cfg: LMConfig) -> Dict:
+    dtype = cfg.dtype
+    k_emb, k_head, k_layers, k_dense = jax.random.split(key, 4)
+    n_dense = cfg.moe.first_dense if cfg.moe is not None else 0
+    n_scan = cfg.n_layers - n_dense
+    layer_keys = jax.random.split(k_layers, n_scan)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": init_dense(k_emb, (cfg.vocab, cfg.d_model), scale=0.02, dtype=dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": init_dense(k_head, (cfg.d_model, cfg.vocab), dtype=dtype),
+    }
+    if n_dense:
+        dff = cfg.moe.d_ff_dense or cfg.d_ff
+        params["dense_layers"] = [
+            _init_layer(jax.random.fold_in(k_dense, i), cfg, dtype, dense_ff=dff)
+            for i in range(n_dense)
+        ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp, x, positions, cfg: LMConfig):
+    h = rmsnorm(x, lp["attn_norm"])
+    if cfg.attn_type == "mla":
+        return mla_train_attention(
+            lp["attn"], h, positions, cfg,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        )
+    p = lp["attn"]
+    q = constrain(jnp.einsum("bsd,dhe->bshe", h, p["wq"]), DB, None, "model")
+    k = constrain(jnp.einsum("bsd,dhe->bshe", h, p["wk"]), DB, None, "model")
+    v = constrain(jnp.einsum("bsd,dhe->bshe", h, p["wv"]), DB, None, "model")
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(
+        q, k, v, causal=True, window=cfg.window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+    )
+    return constrain(jnp.einsum("bshe,hed->bsd", o, p["wo"]), DB, None, None)
+
+
+def _ffn_block(lp, x, cfg: LMConfig, is_moe: bool):
+    h = rmsnorm(x, lp["ffn_norm"])
+    if is_moe:
+        B, S, d = h.shape
+        y, aux = moe_ffn(lp["ffn"], h.reshape(B * S, d), cfg.moe)
+        return constrain(y.reshape(B, S, d), DB, None, None), aux
+    g = constrain(
+        jnp.einsum("bsd,df->bsf", h, lp["ffn"]["w_gate"]), DB, None, "model"
+    )
+    u = constrain(
+        jnp.einsum("bsd,df->bsf", h, lp["ffn"]["w_up"]), DB, None, "model"
+    )
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, lp["ffn"]["w_down"])
+    return constrain(y, DB, None, None), 0.0
+
+
+def _layer_fwd(lp, x, positions, cfg: LMConfig, is_moe: bool):
+    x = constrain(x, DB, None, None)
+    x = x + _attn_block(lp, x, positions, cfg)
+    y, aux = _ffn_block(lp, x, cfg, is_moe)
+    return constrain(x + y, DB, None, None), aux
+
+
+def lm_forward(params, tokens, cfg: LMConfig):
+    """tokens (B, S) -> logits (B, S, vocab) fp32, plus moe aux loss."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    aux_total = 0.0
+    is_moe = cfg.moe is not None
+    for lp in params.get("dense_layers", []):
+        x, _ = _layer_fwd(lp, x, positions, cfg, is_moe=False)
+
+    def body(x, lp):
+        y, aux = _layer_fwd(lp, x, positions, cfg, is_moe=is_moe)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.unroll_layers:
+        n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+        auxs = []
+        for i in range(n_scan):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux = body(x, lp)
+            auxs.append(aux)
+        aux_total = jnp.sum(jnp.stack(auxs)) if is_moe else 0.0
+    else:
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        aux_total = auxs.sum() if is_moe else 0.0
+    x = rmsnorm(x, params["final_norm"])
+    logits = constrain(
+        jnp.einsum(
+            "bsd,dv->bsv", x.astype(jnp.float32),
+            params["lm_head"].astype(jnp.float32),
+        ),
+        DB, None, "model",
+    )
+    return logits, aux_total
+
+
+def lm_loss(params, tokens, cfg: LMConfig, aux_weight: float = 0.01):
+    """Next-token cross entropy (tokens double as targets, shifted)."""
+    logits, aux = lm_forward(params, tokens, cfg)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    ll = jnp.take_along_axis(lp, tgt[..., None].astype(jnp.int32), axis=-1)
+    loss = -ll.mean()
+    return loss + aux_weight * aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# decode (KV-cached)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    L = cfg.n_layers - (cfg.moe.first_dense if cfg.moe else 0)
+    nd = cfg.moe.first_dense if cfg.moe else 0
+    if cfg.attn_type == "mla":
+        cache = {
+            "ckv": jnp.zeros((L, batch, max_len, cfg.kv_lora), dtype),
+            "kr": jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), dtype),
+        }
+        dense = {
+            "ckv": jnp.zeros((nd, batch, max_len, cfg.kv_lora), dtype),
+            "kr": jnp.zeros((nd, batch, max_len, cfg.qk_rope_dim), dtype),
+        } if nd else None
+    else:
+        cache = {
+            "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        }
+        dense = {
+            "k": jnp.zeros((nd, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((nd, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        } if nd else None
+    return {"scan": cache, "dense": dense}
+
+
+def _gqa_decode_layer(lp, x, kc, vc, cache_len, cfg: LMConfig):
+    p = lp["attn"]
+    B = x.shape[0]
+    h = rmsnorm(x, lp["attn_norm"])
+    pos = cache_len - 1
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q = apply_rope(
+        jnp.einsum("bsd,dhe->bshe", h, p["wq"]), positions, cfg.rope_theta
+    )
+    k_new = apply_rope(
+        jnp.einsum("bsd,dhe->bshe", h, p["wk"]), positions, cfg.rope_theta
+    )
+    v_new = jnp.einsum("bsd,dhe->bshe", h, p["wv"])
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), pos, axis=1)
+    o = decode_attention(q, kc, vc, cache_len, window=cfg.window)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), kc, vc
+
+
+def lm_decode_step(params, cache, token, cache_len, cfg: LMConfig):
+    """One decode step. token (B, 1) int32; cache_len = valid tokens incl. new.
+
+    Returns (logits (B, vocab), new_cache)."""
+    B = token.shape[0]
+    x = params["embed"][token].astype(cfg.dtype)
+    is_moe = cfg.moe is not None
+    nd = cfg.moe.first_dense if is_moe else 0
+    new_dense = None
+    if nd:
+        dc = cache["dense"]
+        new_d = jax.tree.map(lambda a: a, dc)
+        for i, lp in enumerate(params["dense_layers"]):
+            if cfg.attn_type == "mla":
+                o, ck, kr = mla_decode_attention(
+                    lp["attn"], rmsnorm(x, lp["attn_norm"]),
+                    new_d["ckv"][i], new_d["kr"][i], cache_len, cfg,
+                )
+                new_d = {
+                    "ckv": new_d["ckv"].at[i].set(ck),
+                    "kr": new_d["kr"].at[i].set(kr),
+                }
+            else:
+                o, kc, vc = _gqa_decode_layer(
+                    lp, x, new_d["k"][i], new_d["v"][i], cache_len, cfg
+                )
+                new_d = {"k": new_d["k"].at[i].set(kc), "v": new_d["v"].at[i].set(vc)}
+            x = x + o
+            y, _ = _ffn_block(lp, x, cfg, is_moe=False)
+            x = x + y
+        new_dense = new_d
+
+    def body(x, lp_cache):
+        if cfg.attn_type == "mla":
+            lp, ck, kr = lp_cache
+            o, ck2, kr2 = mla_decode_attention(
+                lp["attn"], rmsnorm(x, lp["attn_norm"]), ck, kr, cache_len, cfg
+            )
+            x = x + o
+            y, _ = _ffn_block(lp, x, cfg, is_moe=is_moe)
+            return x + y, (ck2, kr2)
+        lp, kc, vc = lp_cache
+        o, kc2, vc2 = _gqa_decode_layer(lp, x, kc, vc, cache_len, cfg)
+        x = x + o
+        y, _ = _ffn_block(lp, x, cfg, is_moe=is_moe)
+        return x + y, (kc2, vc2)
+
+    sc = cache["scan"]
+    if cfg.attn_type == "mla":
+        xs = (params["layers"], sc["ckv"], sc["kr"])
+    else:
+        xs = (params["layers"], sc["k"], sc["v"])
+    if cfg.unroll_layers:
+        n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+        outs = []
+        for i in range(n_scan):
+            xi = jax.tree.map(lambda a: a[i], xs)
+            x, o = body(x, xi)
+            outs.append(o)
+        new_sc = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        x, new_sc = jax.lax.scan(body, x, xs)
+    if cfg.attn_type == "mla":
+        new_scan = {"ckv": new_sc[0], "kr": new_sc[1]}
+    else:
+        new_scan = {"k": new_sc[0], "v": new_sc[1]}
+    x = rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.float32),
+        params["lm_head"].astype(jnp.float32),
+    )[:, 0]
+    return logits, {"scan": new_scan, "dense": new_dense}

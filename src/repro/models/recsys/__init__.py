@@ -1,0 +1,9 @@
+from repro.models.recsys.two_tower import (
+    TwoTowerConfig, init_two_tower, two_tower_loss, score_candidates,
+    serve_user_tower, embedding_bag,
+)
+
+__all__ = [
+    "TwoTowerConfig", "init_two_tower", "two_tower_loss", "score_candidates",
+    "serve_user_tower", "embedding_bag",
+]

@@ -1,0 +1,56 @@
+"""Minimal sharding-transparent optimizers (pytree-structural, no optax dep).
+
+Optimizer state mirrors the parameter pytree leaf-for-leaf, so any parameter
+PartitionSpec applies verbatim to the state (ZeRO-style sharded optimizer
+states fall out of the 2D param sharding for free).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, params, state,
+    lr=1e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, p, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if weight_decay:
+            upd = upd + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * upd
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, p, m, v) for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def sgd_update(grads, params, lr=1e-2):
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads,
+    )

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only launch/dryrun.py forces 512 placeholders."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import kronecker_graph
+    from repro.graph.csr import add_self_loops
+
+    return add_self_loops(kronecker_graph(2000, 8, seed=1))
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    from repro.graph import kronecker_graph
+    from repro.graph.csr import add_self_loops
+
+    return add_self_loops(kronecker_graph(400, 6, seed=2))
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

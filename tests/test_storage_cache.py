@@ -1,0 +1,135 @@
+"""Storage tier + host cache unit tests."""
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import HostCache
+from repro.core.counters import Counters
+from repro.core.storage import StorageTier
+
+
+@pytest.fixture()
+def storage():
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    yield st_
+    st_.close()
+
+
+class TestStorage:
+    def test_roundtrip(self, storage, rng):
+        storage.alloc("a", (100, 16), np.float32)
+        x = rng.standard_normal((40, 16)).astype(np.float32)
+        storage.write_rows("a", 30, x)
+        y = storage.read_rows("a", 30, 70)
+        np.testing.assert_array_equal(x, y)
+
+    def test_page_accounting(self, storage):
+        storage.alloc("a", (100, 16), np.float32)
+        x = np.zeros((1, 16), np.float32)  # 64B write -> 1 page
+        storage.write_rows("a", 0, x)
+        assert storage.counters.storage_write_bytes == 64
+        assert storage.counters.storage_write_paged_bytes == 16 * 1024
+
+    def test_scattered_read_amplification(self, storage, rng):
+        """Vertex-granular random reads amplify to >= one page per run
+        (the paper's Appendix F anti-pattern)."""
+        storage.alloc("a", (4096, 16), np.float32)
+        rows = np.arange(0, 4096, 64)  # 64 scattered single rows
+        storage.read_rows_scattered("a", rows)
+        c = storage.counters
+        assert c.storage_read_paged_bytes >= 64 * 16 * 1024
+        assert c.storage_read_paged_bytes > 10 * c.storage_read_bytes
+
+    def test_free_and_realloc(self, storage):
+        storage.alloc("a", (10, 4))
+        assert storage.exists("a")
+        storage.free("a")
+        assert not storage.exists("a")
+        storage.alloc("a", (20, 4))
+        assert storage.shape("a") == (20, 4)
+
+
+class TestCache:
+    def _mk(self, budget):
+        c = Counters()
+        st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+        st_.alloc("back", (1024, 64), np.float32)
+        return HostCache(budget, st_, c), st_, c
+
+    def test_hit_miss(self, rng):
+        cache, st_, c = self._mk(1 << 20)
+        arr = rng.standard_normal((16, 64)).astype(np.float32)
+        got = cache.get(("act", 0, 0), loader=lambda: arr)
+        np.testing.assert_array_equal(got, arr)
+        assert c.cache_misses == 1
+        got2 = cache.get(("act", 0, 0), loader=lambda: 1 / 0)
+        np.testing.assert_array_equal(got2, arr)
+        assert c.cache_hits == 1
+        st_.close()
+
+    def test_layerwise_lru_eviction(self, rng):
+        """Whole least-recently-used LAYER evicts first (paper §4)."""
+        entry = rng.standard_normal((100, 64)).astype(np.float32)  # 25.6KB
+        cache, st_, c = self._mk(int(entry.nbytes * 4.5))
+        for layer in range(2):
+            for p in range(2):
+                cache.get(("act", layer, p), loader=lambda: entry.copy())
+        # touch layer 0 -> layer 1 becomes LRU
+        cache.get(("act", 0, 0), loader=lambda: 1 / 0)
+        cache.get(("act", 0, 1), loader=lambda: 1 / 0)
+        # force eviction: new entry
+        cache.get(("act", 2, 0), loader=lambda: entry.copy())
+        assert cache.contains(("act", 0, 0)) and cache.contains(("act", 0, 1))
+        assert not (
+            cache.contains(("act", 1, 0)) and cache.contains(("act", 1, 1))
+        )
+        st_.close()
+
+    def test_dirty_eviction_writes_back(self, rng):
+        cache, st_, c = self._mk(1 << 18)  # 256KB
+        buf = rng.standard_normal((512, 64)).astype(np.float32)  # 128KB
+        ok = cache.put(("grad", 0, 0), buf.copy(), dirty=True,
+                       spill_name="back", spill_row0=0)
+        assert ok
+        # force eviction with another large entry
+        cache.get(("act", 1, 0), loader=lambda: buf.copy())
+        cache.get(("act", 2, 0), loader=lambda: buf.copy())
+        assert not cache.contains(("grad", 0, 0))
+        got = st_.read_rows("back", 0, 512)
+        np.testing.assert_array_equal(got, buf)
+        st_.close()
+
+    def test_oversize_streams_through(self, rng):
+        cache, st_, c = self._mk(1 << 12)  # 4KB budget
+        big = rng.standard_normal((512, 64)).astype(np.float32)
+        got = cache.get(("act", 0, 0), loader=lambda: big)
+        np.testing.assert_array_equal(got, big)
+        assert c.cache_bypass == 1
+        assert not cache.contains(("act", 0, 0))
+        st_.close()
+
+    @given(budget_kb=st.sampled_from([4, 64, 1024]), n_ops=st.integers(5, 40))
+    @settings(max_examples=10, deadline=None)
+    def test_budget_never_exceeded(self, budget_kb, n_ops):
+        rng = np.random.default_rng(0)
+        cache, st_, c = self._mk(budget_kb << 10)
+        for i in range(n_ops):
+            key = ("act", i % 3, i % 5)
+            arr = rng.standard_normal((rng.integers(4, 64), 64)).astype(
+                np.float32
+            )
+            cache.get(key, loader=lambda a=arr: a)
+            assert cache.used_bytes <= cache.budget
+        st_.close()
+
+
+class TestCostModel:
+    def test_backward_inequality(self):
+        """Paper §5: B_host/B_SSD > 2(α+1)/(α+3) favors regathering;
+        check the threshold values quoted (1.2–1.6 for α=2–8)."""
+        for alpha, lo, hi in [(2.0, 1.1, 1.3), (8.0, 1.5, 1.7)]:
+            thresh = 2 * (alpha + 1) / (alpha + 3)
+            assert lo < thresh < hi

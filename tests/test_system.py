@@ -1,0 +1,156 @@
+"""End-to-end system behaviour: offloaded full-graph training converges
+identically to in-memory training (the paper's headline property), and the
+engine telemetry matches the paper's analytic I/O model."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Counters, HostCache, SSOEngine, StorageTier, build_plan, modeled_time,
+)
+from repro.graph import (
+    gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
+)
+from repro.graph.csr import add_self_loops
+from repro.graph.synthetic import random_features, random_labels
+from repro.models.gnn.layers import (
+    full_graph_loss, full_graph_topo, get_gnn,
+)
+from repro.optim.adamw import adamw_init, adamw_update, sgd_update
+
+
+def test_offloaded_training_curve_equals_in_memory():
+    """Train 8 epochs with the SSO engine and with plain autodiff: loss
+    curves must match step-for-step (no algorithm change). SGD updates so
+    float-reassociation noise isn't sign-amplified by Adam's normalizer."""
+    g = add_self_loops(kronecker_graph(800, 6, seed=3))
+    n_parts = 4
+    res = switching_aware_partition(g, n_parts, max_iters=8)
+    ew = gcn_norm_coeffs(g)
+    plan = build_plan(g, res.parts, n_parts, edge_weight=ew)
+    X = random_features(g.n_nodes, 16, 0)
+    Y = random_labels(g.n_nodes, 6, 0)
+    Xr, Yr = X[plan.ro.perm], Y[plan.ro.perm]
+    spec = get_gnn("gcn")
+    dims = [16, 24, 6]
+
+    # in-memory reference
+    rg = plan.ro.graph
+    topo = full_graph_topo(rg.indptr, rg.indices, rg.n_nodes, plan.edge_weight)
+    params_a = spec.init(jax.random.PRNGKey(0), 16, 24, 6, 2)
+    curve_a = []
+    for _ in range(8):
+        l, gr = jax.value_and_grad(
+            lambda p: full_graph_loss(
+                spec, p, jnp.asarray(Xr), topo, jnp.asarray(Yr)
+            )
+        )(params_a)
+        params_a = sgd_update(gr, params_a, lr=5e-2)
+        curve_a.append(float(l))
+
+    # offloaded
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    cache = HostCache(8 << 20, st_, c)
+    eng = SSOEngine(spec, plan, dims, st_, cache, c, mode="regather")
+    eng.initialize(Xr)
+    params_b = spec.init(jax.random.PRNGKey(0), 16, 24, 6, 2)
+    curve_b = []
+    for _ in range(8):
+        l, gr = eng.run_epoch(params_b, Yr)
+        params_b = sgd_update(gr, params_b, lr=5e-2)
+        curve_b.append(l)
+    st_.close()
+    np.testing.assert_allclose(curve_a, curve_b, rtol=1e-4)
+    assert curve_b[-1] < curve_b[0]  # actually learning
+
+
+def test_io_counters_match_analytic_model():
+    """Paper §5 I/O analysis: with ample cache, GriNNder's host->device
+    traffic per layer ≈ αD (gathered activations only, no snapshots)."""
+    g = add_self_loops(kronecker_graph(1500, 8, seed=1))
+    n_parts = 8
+    res = switching_aware_partition(g, n_parts, max_iters=10)
+    plan = build_plan(g, res.parts, n_parts, edge_weight=gcn_norm_coeffs(g))
+    H = 32
+    dims = [H, H, 8]
+    X = random_features(g.n_nodes, H, 0)
+    Y = random_labels(g.n_nodes, 8, 0)
+    Xr, Yr = X[plan.ro.perm], Y[plan.ro.perm]
+    spec = get_gnn("gcn")
+    params = spec.init(jax.random.PRNGKey(0), H, H, 8, 2)
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    cache = HostCache(64 << 20, st_, c)
+    eng = SSOEngine(spec, plan, dims, st_, cache, c, mode="regather")
+    eng.initialize(Xr)
+    c.reset()
+    eng.forward(params)
+    st_.close()
+    D = g.n_nodes * H * 4
+    alpha = plan.alpha
+    # forward h2d per layer within pow2-padding factor of alpha*D
+    h2d_per_layer = c.h2d_bytes / 2
+    assert 0.8 * alpha * D < h2d_per_layer < 2.5 * alpha * D
+    # bypass writes: activations written straight to storage
+    assert c.storage_write_bytes >= D
+
+
+def test_modeled_time_orders_engines():
+    """Under the paper's tier bandwidths the regather engine's modeled epoch
+    time beats the snapshot engine when host memory is tight (Table 3
+    regime)."""
+    g = add_self_loops(kronecker_graph(2000, 10, seed=2))
+    res = switching_aware_partition(g, 8, max_iters=8)
+    plan = build_plan(g, res.parts, 8, edge_weight=gcn_norm_coeffs(g))
+    H = 64
+    dims = [H, H, H, 8]
+    X = random_features(g.n_nodes, H, 0)
+    Y = random_labels(g.n_nodes, 8, 0)
+    Xr, Yr = X[plan.ro.perm], Y[plan.ro.perm]
+    spec = get_gnn("gcn")
+    params = spec.init(jax.random.PRNGKey(0), H, H, 8, 3)
+    D = g.n_nodes * H * 4
+    times = {}
+    for mode in ["regather", "snapshot"]:
+        c = Counters()
+        st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+        cache = HostCache(int(2.5 * D), st_, c)
+        eng = SSOEngine(spec, plan, dims, st_, cache, c, mode=mode)
+        eng.initialize(Xr)
+        c.reset()
+        eng.run_epoch(params, Yr)
+        times[mode] = modeled_time(c).overlapped
+        st_.close()
+    assert times["regather"] < times["snapshot"]
+
+
+def test_overlap_prefetch_same_results():
+    """The I/O-overlap prefetch thread must not change results."""
+    g = add_self_loops(kronecker_graph(600, 6, seed=4))
+    res = switching_aware_partition(g, 4, max_iters=6)
+    plan = build_plan(g, res.parts, 4, edge_weight=gcn_norm_coeffs(g))
+    X = random_features(g.n_nodes, 16, 0)
+    Y = random_labels(g.n_nodes, 6, 0)
+    Xr, Yr = X[plan.ro.perm], Y[plan.ro.perm]
+    spec = get_gnn("gcn")
+    params = spec.init(jax.random.PRNGKey(0), 16, 16, 6, 2)
+    out = {}
+    for overlap in [False, True]:
+        c = Counters()
+        st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+        eng = SSOEngine(
+            spec, plan, [16, 16, 6], st_, HostCache(8 << 20, st_, c), c,
+            mode="regather", overlap=overlap,
+        )
+        eng.initialize(Xr)
+        loss, grads = eng.run_epoch(params, Yr)
+        eng.close()
+        st_.close()
+        out[overlap] = (loss, grads)
+    assert abs(out[False][0] - out[True][0]) < 1e-6
+    for a, b in zip(jax.tree.leaves(out[False][1]), jax.tree.leaves(out[True][1])):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
