@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import Counters, HostCache, SSOEngine, StorageTier, build_plan
 from repro.core.costmodel import PAPER_WORKSTATION, modeled_time
+from repro.runtime import PipelineConfig
 from repro.graph import (
     gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
 )
@@ -37,6 +38,8 @@ def main():
     ap.add_argument("--layers", type=int, default=5)
     ap.add_argument("--parts", type=int, default=16)
     ap.add_argument("--cache-mb", type=int, default=24)
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="async runtime lookahead (0 = serial engine)")
     ap.add_argument("--ckpt", default="/tmp/grinnder_ckpt")
     args = ap.parse_args()
 
@@ -62,7 +65,8 @@ def main():
     storage = StorageTier(tempfile.mkdtemp(prefix="grinnder_e2e_"), counters=c)
     cache = HostCache(args.cache_mb << 20, storage, c)
     engine = SSOEngine(spec, plan, dims, storage, cache, c,
-                       mode="regather", overlap=True)
+                       mode="regather",
+                       pipeline=PipelineConfig(depth=args.pipeline_depth))
     engine.initialize(X)
 
     start = 0
@@ -83,6 +87,13 @@ def main():
         if (epoch + 1) % 50 == 0:
             save_checkpoint(args.ckpt, epoch + 1, params, opt)
             print(f"checkpointed at epoch {epoch + 1}")
+    if args.pipeline_depth > 0:
+        print("pipeline busy(s): "
+              + ", ".join(f"{k}={v:.2f}"
+                          for k, v in sorted(c.stage_busy_seconds.items())))
+        print("pipeline stall(s): "
+              + ", ".join(f"{k}={v:.2f}"
+                          for k, v in sorted(c.stage_stall_seconds.items())))
     engine.close()
     storage.close()
     print("done")

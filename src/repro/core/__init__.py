@@ -1,6 +1,6 @@
 """GriNNder core: structured storage offloading (cache/(re)gather/bypass)."""
 from repro.core.counters import Counters, PhaseTimer
-from repro.core.storage import StorageTier
+from repro.core.storage import StorageIOQueue, StorageTier
 from repro.core.cache import HostCache
 from repro.core.plan import PartitionPlan, WorkUnit, build_plan
 from repro.core.engine import SSOEngine
@@ -10,7 +10,7 @@ from repro.core.costmodel import (
 from repro.core.microbatch import microbatch_grads, build_full_mfg
 
 __all__ = [
-    "Counters", "PhaseTimer", "StorageTier", "HostCache",
+    "Counters", "PhaseTimer", "StorageTier", "StorageIOQueue", "HostCache",
     "PartitionPlan", "WorkUnit", "build_plan", "SSOEngine",
     "TierBandwidths", "PAPER_WORKSTATION", "modeled_time", "ModeledTime",
     "microbatch_grads", "build_full_mfg",

@@ -12,6 +12,14 @@ hierarchy:
 
 Dirty entries (gradient write-back buffers — the paper's "host memory as a
 write-back buffer", §3) are flushed to the storage tier on eviction.
+
+Concurrency: the pipeline runtime (repro/runtime/) reads through this cache
+from prefetch/gather worker threads while the main loop scatter-accumulates
+into dirty entries. Pins are therefore *counted* (an entry may be held by
+several in-flight pipeline stages at once), loaders run outside the lock so
+storage reads overlap main-loop cache traffic, and ``acquire``/``release``
+give the scatter path an atomic peek-and-pin so a concurrent eviction can
+never drop an update into a flushed-and-forgotten buffer.
 """
 from __future__ import annotations
 
@@ -29,12 +37,12 @@ Key = Tuple[str, int, int]  # (kind, layer, partition)
 class _Entry:
     __slots__ = ("arr", "tick", "dirty", "pinned", "spill_name", "spill_row0")
 
-    def __init__(self, arr, tick, dirty=False, pinned=False,
+    def __init__(self, arr, tick, dirty=False, pinned=0,
                  spill_name=None, spill_row0=0):
         self.arr = arr
         self.tick = tick
         self.dirty = dirty
-        self.pinned = pinned
+        self.pinned = int(pinned)   # pin COUNT (0 = evictable)
         self.spill_name = spill_name  # storage target on dirty eviction
         self.spill_row0 = spill_row0
 
@@ -104,6 +112,10 @@ class HostCache:
                     break
         return True
 
+    def _insert(self, key: Key, e: _Entry) -> None:
+        self._entries[key] = e
+        self._bytes += e.arr.nbytes
+
     # -- API ----------------------------------------------------------------
     @property
     def used_bytes(self) -> int:
@@ -117,7 +129,9 @@ class HostCache:
         """Fetch a partition block, loading through the cache on miss.
 
         If the block cannot fit even after eviction, it streams through
-        uncached (counted as bypass)."""
+        uncached (counted as bypass). The loader runs OUTSIDE the lock, so a
+        pipeline worker's storage read never blocks main-loop cache traffic;
+        a racing load of the same key keeps whichever copy landed first."""
         with self._lock:
             e = self._entries.get(key)
             if e is not None:
@@ -125,15 +139,54 @@ class HostCache:
                 self._touch(e)
                 return e.arr
             self.counters.cache_misses += 1
-            arr = loader()
+        arr = loader()
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:  # racing loader won; use the resident copy
+                self._touch(e)
+                return e.arr
             if self._make_room(arr.nbytes):
                 self._tick += 1
-                self._entries[key] = _Entry(arr, self._tick)
-                self._bytes += arr.nbytes
+                self._insert(key, _Entry(arr, self._tick))
             else:
                 self.counters.cache_bypass += 1
             self.counters.sample_memory(self._bytes)
             return arr
+
+    def prefetch(
+        self,
+        key: Key,
+        loader: Callable[[], np.ndarray],
+        pin: bool = False,
+    ) -> bool:
+        """Stage-1 of the pipeline: ensure ``key`` is resident (loading it if
+        needed) without returning the data. With ``pin=True`` the entry's pin
+        count is raised so it stays resident until the consuming gather calls
+        :meth:`unpin`. Returns False when the entry could not be kept
+        resident (budget too tight) — the later ``get`` will reload."""
+        with self._lock:
+            self.counters.cache_prefetches += 1
+            e = self._entries.get(key)
+            if e is not None:
+                self._touch(e)
+                if pin:
+                    e.pinned += 1
+                return True
+        arr = loader()
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:
+                self._touch(e)
+                if pin:
+                    e.pinned += 1
+                return True
+            if self._make_room(arr.nbytes):
+                self._tick += 1
+                self._insert(key, _Entry(arr, self._tick, pinned=1 if pin else 0))
+                self.counters.sample_memory(self._bytes)
+                return True
+            self.counters.cache_bypass += 1
+            return False
 
     def put(
         self,
@@ -145,18 +198,26 @@ class HostCache:
         spill_row0: int = 0,
     ) -> bool:
         """Insert (e.g. gradient write-back buffer). Returns False if the
-        entry could not be cached (caller must handle, e.g. direct storage)."""
+        entry could not be cached (caller must handle, e.g. direct storage).
+
+        Replacing an existing DIRTY entry first flushes it to its spill
+        target — silently dropping it would lose unflushed gradient data."""
         with self._lock:
-            if key in self._entries:
+            old = self._entries.get(key)
+            if old is not None:
+                if old.dirty and old.spill_name is not None \
+                        and old.arr is not arr:
+                    self.storage.write_rows(
+                        old.spill_name, old.spill_row0, old.arr
+                    )
                 self._evict_silent(key)
             if not self._make_room(arr.nbytes):
                 return False
             self._tick += 1
-            self._entries[key] = _Entry(
-                arr, self._tick, dirty=dirty, pinned=pinned,
+            self._insert(key, _Entry(
+                arr, self._tick, dirty=dirty, pinned=1 if pinned else 0,
                 spill_name=spill_name, spill_row0=spill_row0,
-            )
-            self._bytes += arr.nbytes
+            ))
             self.counters.sample_memory(self._bytes)
             return True
 
@@ -172,14 +233,39 @@ class HostCache:
             self._touch(e)
             return e.arr
 
-    def contains(self, key: Key) -> bool:
-        return key in self._entries
+    def acquire(self, key: Key) -> Optional[np.ndarray]:
+        """Atomic peek-and-pin: the returned array cannot be evicted until
+        the caller invokes :meth:`release`. Used by the scatter-accumulate
+        path so pipeline workers can't flush a buffer mid-update."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                return None
+            self._touch(e)
+            e.pinned += 1
+            return e.arr
+
+    def release(self, key: Key) -> None:
+        self.unpin(key)
+
+    def pin(self, key: Key) -> bool:
+        """Raise the pin count of a resident entry. Returns False if absent."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                return False
+            e.pinned += 1
+            return True
 
     def unpin(self, key: Key) -> None:
+        """Drop one pin (no-op when the entry is absent or unpinned)."""
         with self._lock:
             e = self._entries.get(key)
             if e is not None:
-                e.pinned = False
+                e.pinned = max(0, e.pinned - 1)
+
+    def contains(self, key: Key) -> bool:
+        return key in self._entries
 
     def drop(self, key: Key, flush: bool = True) -> None:
         with self._lock:

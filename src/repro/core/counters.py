@@ -4,10 +4,18 @@ These counters are the measurement substrate for the paper-claim validations:
 Table 6/7 (I/O volume & memory footprint), §8.4 (host memory usage), §8.9
 (storage write volume), and the tier-bandwidth cost model used to reproduce
 Table 1/2/3 speedup ratios on non-GPU hardware.
+
+The pipeline runtime (repro/runtime/) additionally records per-stage busy
+time (work done on pipeline worker threads) and per-stage stall time (time a
+stage spent blocked on a queue or on write backpressure), from which the
+achieved I/O-compute overlap can be derived (paper Fig. 13 bandwidth study).
+All mutators are thread-safe: stage workers and the write-behind thread
+report into the same instance as the main compute loop.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import defaultdict
 from typing import Dict
@@ -33,24 +41,62 @@ class Counters:
     cache_misses: int = 0
     cache_evictions: int = 0
     cache_bypass: int = 0
+    cache_prefetches: int = 0
     cache_peak_bytes: int = 0
     # device compute (flop estimate filled by engine when available)
     device_flops: int = 0
 
     def __post_init__(self):
         self.phase_seconds: Dict[str, float] = defaultdict(float)
+        # pipeline runtime accounting (repro/runtime/): stage -> seconds
+        self.stage_busy_seconds: Dict[str, float] = defaultdict(float)
+        self.stage_stall_seconds: Dict[str, float] = defaultdict(float)
         self._mem_timeline = []  # (t, cache_bytes) samples for Fig-9 style plots
+        self._lock = threading.Lock()
 
     def record_phase(self, name: str, seconds: float) -> None:
-        self.phase_seconds[name] += seconds
+        with self._lock:
+            self.phase_seconds[name] += seconds
+
+    def record_busy(self, stage: str, seconds: float) -> None:
+        """Work executed on a pipeline worker thread (overlappable)."""
+        with self._lock:
+            self.stage_busy_seconds[stage] += seconds
+
+    def record_stall(self, stage: str, seconds: float) -> None:
+        """Time a stage spent blocked (queue full/empty, backpressure)."""
+        with self._lock:
+            self.stage_stall_seconds[stage] += seconds
 
     def sample_memory(self, cache_bytes: int) -> None:
-        self.cache_peak_bytes = max(self.cache_peak_bytes, cache_bytes)
-        self._mem_timeline.append((time.perf_counter(), cache_bytes))
+        with self._lock:
+            self.cache_peak_bytes = max(self.cache_peak_bytes, cache_bytes)
+            self._mem_timeline.append((time.perf_counter(), cache_bytes))
 
     @property
     def memory_timeline(self):
         return list(self._mem_timeline)
+
+    def overlap_summary(self, wall_seconds: float) -> Dict[str, float]:
+        """Achieved overlap for a run of ``wall_seconds``.
+
+        ``overlapped_seconds`` is worker busy time that did NOT translate
+        into the main loop waiting (busy - compute_wait stall): the portion
+        of prefetch/gather/write work genuinely hidden behind compute.
+        """
+        with self._lock:
+            busy = sum(self.stage_busy_seconds.values())
+            wait = self.stage_stall_seconds.get("compute_wait", 0.0)
+            stall_total = sum(self.stage_stall_seconds.values())
+        overlapped = max(0.0, busy - wait)
+        frac = min(1.0, overlapped / wall_seconds) if wall_seconds > 0 else 0.0
+        return dict(
+            busy_seconds=busy,
+            compute_wait_seconds=wait,
+            stall_seconds=stall_total,
+            overlapped_seconds=overlapped,
+            overlapped_frac=frac,
+        )
 
     def snapshot(self) -> Dict[str, float]:
         d = {
@@ -58,12 +104,16 @@ class Counters:
             for f in dataclasses.fields(self)
         }
         d.update({f"t_{k}": v for k, v in self.phase_seconds.items()})
+        d.update({f"busy_{k}": v for k, v in self.stage_busy_seconds.items()})
+        d.update({f"stall_{k}": v for k, v in self.stage_stall_seconds.items()})
         return d
 
     def reset(self) -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name, 0)
         self.phase_seconds.clear()
+        self.stage_busy_seconds.clear()
+        self.stage_stall_seconds.clear()
         self._mem_timeline.clear()
 
 

@@ -14,13 +14,18 @@ Implements the cache-(re)gather-bypass workflow with two gradient engines:
 Both engines drive the same pure layer functions (models/gnn/layers.py), so
 gradient equality against whole-graph ``jax.grad`` is exact up to float
 reassociation — the paper's "no algorithm change" property (Appendix W).
+
+Execution is delegated to the async pipeline runtime (repro/runtime/): each
+layer pass streams its work units through prefetch → gather worker stages
+while the main thread computes in schedule order and bypass writes retire on
+a write-behind I/O thread. ``pipeline.depth == 0`` is the serial engine;
+``depth >= 1`` overlaps I/O with compute and is bit-identical to serial
+(the compute order and every gathered buffer are unchanged).
 """
 from __future__ import annotations
 
-import concurrent.futures as cf
-import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +36,9 @@ from repro.core.counters import Counters, PhaseTimer
 from repro.core.plan import PartitionPlan, WorkUnit
 from repro.core.storage import StorageTier
 from repro.models.gnn.layers import GNNSpec, LocalTopo
+
+if TYPE_CHECKING:  # runtime is imported lazily to avoid an import cycle
+    from repro.runtime import PipelineConfig
 
 
 def _act_name(layer: int) -> str:
@@ -57,7 +65,12 @@ class SSOEngine:
         mode: str = "regather",
         overlap: bool = False,
         dtype=np.float32,
+        pipeline: Union[PipelineConfig, int, None] = None,
     ):
+        # lazy import: repro.runtime depends on repro.core submodules
+        from repro.runtime.config import PipelineConfig
+        from repro.runtime.executor import PipelineExecutor
+
         assert mode in ("regather", "snapshot")
         self.spec = spec
         self.plan = plan
@@ -67,12 +80,21 @@ class SSOEngine:
         self.cache = cache
         self.counters = counters or storage.counters
         self.mode = mode
-        self.overlap = overlap
         self.dtype = np.dtype(dtype)
         self._materialized_grads: set = set()
-        self._pool = (
-            cf.ThreadPoolExecutor(max_workers=1) if overlap else None
-        )
+        # (layer, p) -> keys the prefetch stage actually pinned for that
+        # unit; the gather stage pops and releases exactly these (prefetch
+        # of a unit strictly precedes its gather via the stage queues)
+        self._prefetch_pins: Dict = {}
+        if pipeline is None:
+            # legacy knob: overlap=True was a single-worker next-unit
+            # prefetch — depth-1 pipelining subsumes it
+            pipeline = PipelineConfig(depth=1 if overlap else 0)
+        elif isinstance(pipeline, int):
+            pipeline = PipelineConfig(depth=pipeline)
+        self.pipeline = pipeline
+        self.overlap = pipeline.enabled
+        self._rt = PipelineExecutor(pipeline, self.counters, storage, cache)
         self._jit_fwd = {}
         self._jit_bwd = {}
         self._jit_loss = None
@@ -156,9 +178,12 @@ class SSOEngine:
 
     def _gather(self, layer: int, u: WorkUnit, pad_rows: int) -> np.ndarray:
         """Assemble GA_p^{layer} from the partition cache (paper's host-side
-        gather: one sequential run per source partition)."""
+        gather: one sequential run per source partition). The output buffer
+        comes from the runtime pool — the caller returns it via
+        ``self._rt.pool.release`` once the device has consumed it."""
         d = self.dims[layer]
-        buf = np.zeros((pad_rows, d), self.dtype)
+        buf = self._rt.pool.acquire((pad_rows, d), self.dtype)
+        buf[u.n_req :] = 0  # rows [0, n_req) are fully overwritten below
         ptr = u.req_part_ptr
         for q in u.req_parts:
             block = self.cache.get(
@@ -167,32 +192,51 @@ class SSOEngine:
             )
             a0, _ = self.plan.ro.partition_slice(int(q))
             rows = u.req_global[ptr[q] : ptr[q + 1]] - a0
-            buf[ptr[q] : ptr[q + 1]] = block[rows]
+            # np.take releases the GIL for numeric dtypes (unlike advanced
+            # indexing), letting worker-thread gathers overlap jit dispatch;
+            # mode="clip" skips the bounds-check path (rows are plan-valid)
+            np.take(block, rows, axis=0, out=buf[ptr[q] : ptr[q + 1]],
+                    mode="clip")
+        # release exactly the pins the prefetch stage took for THIS unit
+        # (none in serial mode or when a prefetch couldn't keep residency)
+        for key in self._prefetch_pins.pop((layer, u.p), ()):
+            self.cache.unpin(key)
         self.counters.host_gather_bytes += u.n_req * d * self.dtype.itemsize
         return buf
 
-    def _prefetch(self, layer: int, u: WorkUnit) -> None:
+    def _gather_padded(self, layer: int, u: WorkUnit, phase: str) -> np.ndarray:
+        with PhaseTimer(self.counters, phase):
+            return self._gather(layer, u, u.r_pad)
+
+    def _prefetch_unit(self, layer: int, u: WorkUnit) -> None:
+        """Stage-1: make (and keep) the unit's source partitions resident."""
+        pin = self.pipeline.pin_prefetched
+        pinned = []
         for q in u.req_parts:
-            self.cache.get(
-                ("act", layer, int(q)),
+            key = ("act", layer, int(q))
+            resident = self.cache.prefetch(
+                key,
                 loader=partial(self._load_part_block, layer, int(q)),
+                pin=pin,
             )
+            if pin and resident:
+                pinned.append(key)
+        if pinned:
+            self._prefetch_pins[(layer, u.p)] = pinned
 
     # -------------------------------------------------------------- forward
     def forward(self, params: List) -> None:
         sched = self.plan.schedule
+        rt = self._rt
         for l in range(self.n_layers):
             fwd = self._fwd(activate=(l < self.n_layers - 1))
-            d_out = self.dims[l + 1]
-            for i, p in enumerate(sched):
-                u = self.plan.unit(p)
-                # gather from cache (+ optional overlap prefetch of next unit)
-                fut = None
-                if self._pool is not None and i + 1 < len(sched):
-                    nxt = self.plan.unit(sched[i + 1])
-                    fut = self._pool.submit(self._prefetch, l, nxt)
-                with PhaseTimer(self.counters, "gather"):
-                    ga = self._gather_padded(l, u)
+            units = [self.plan.unit(p) for p in sched]
+            gather_fn = lambda u, _l=l: self._gather_padded(_l, u, "gather")
+            prefetch_fn = (
+                (lambda u, _l=l: self._prefetch_unit(_l, u))
+                if self.pipeline.enabled else None
+            )
+            for u, ga in rt.run_stream(units, gather_fn, prefetch_fn):
                 with PhaseTimer(self.counters, "compute_fwd"):
                     ga_dev = jnp.asarray(ga)
                     self.counters.h2d_bytes += ga.nbytes
@@ -203,26 +247,31 @@ class SSOEngine:
                     # HongTu: persist GA for the backward pass (α-amplified).
                     # The snapshot is offloaded from the device, so it transits
                     # the device<->host link (paper Table 6: (2α+1)D forward).
-                    self.counters.d2h_bytes += u.n_req * ga.shape[1] * self.dtype.itemsize
-                    self._snapshot_put(l, p, ga[: u.n_req])
+                    self.counters.d2h_bytes += (
+                        u.n_req * ga.shape[1] * self.dtype.itemsize
+                    )
+                    self._snapshot_put(l, u.p, ga[: u.n_req])
+                rt.pool.release(ga)
                 with PhaseTimer(self.counters, "bypass_write"):
                     # bypass: output activations go straight to storage
-                    self.storage.write_rows(_act_name(l + 1), u.v0, out_np)
-                if fut is not None:
-                    fut.result()
-            # next layer reads act{l+1}; act{l} only needed again in backward
-
-    def _gather_padded(self, layer: int, u: WorkUnit) -> np.ndarray:
-        return self._gather(layer, u, u.r_pad)
+                    # (write-behind when pipelined; out_np is freshly owned)
+                    rt.write_rows(_act_name(l + 1), u.v0, out_np)
+            # barrier: layer l+1 reads act{l+1} — all writes must be down
+            rt.drain_writes()
+            # act{l+1} was just rewritten: cached blocks of it (loaded by a
+            # previous epoch's gathers) are stale — drop before any reader
+            self.cache.drop_layer("act", l + 1, flush=False)
 
     # ------------------------------------------------------------ snapshots
     def _snapshot_put(self, layer: int, p: int, ga_real: np.ndarray) -> None:
         name = _snap_name(layer, p)
+        # copy: ga_real views a pooled gather buffer that will be recycled
+        snap = np.array(ga_real)
         ok = self.cache.put(
-            ("snap", layer, p), ga_real, dirty=True, spill_name=name
+            ("snap", layer, p), snap, dirty=True, spill_name=name
         )
         if not ok:
-            self.storage.write_rows(name, 0, ga_real)
+            self.storage.write_rows(name, 0, snap)
             self._materialized_grads.add(("snapdisk", layer, p))
 
     def _snapshot_get(self, layer: int, p: int, u: WorkUnit) -> np.ndarray:
@@ -232,8 +281,9 @@ class SSOEngine:
             self.counters.cache_misses += 1
         else:
             self.counters.cache_hits += 1
-        buf = np.zeros((u.r_pad, arr.shape[1]), self.dtype)
+        buf = self._rt.pool.acquire((u.r_pad, arr.shape[1]), self.dtype)
         buf[: arr.shape[0]] = arr
+        buf[arr.shape[0] :] = 0
         return buf
 
     # ------------------------------------------------------- grad write-back
@@ -241,11 +291,13 @@ class SSOEngine:
         self, layer: int, q: int, rows_local: np.ndarray, values: np.ndarray
     ) -> None:
         """Scatter-accumulate ∇A^{layer} rows for source partition q (the
-        paper's host write-back buffer with storage spill)."""
+        paper's host write-back buffer with storage spill). The buffer is
+        pinned for the duration of the update so a concurrent pipeline-worker
+        eviction cannot flush it mid-accumulate."""
         key = ("grad", layer, q)
         a0, a1 = self.plan.ro.partition_slice(q)
         name = _grad_name(layer)
-        buf = self.cache.peek(key)
+        buf = self.cache.acquire(key)
         if buf is None:
             if ("gradmat", layer, q) in self._materialized_grads:
                 buf = self.storage.read_rows(name, a0, a1)
@@ -253,7 +305,8 @@ class SSOEngine:
                 buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
                 self._materialized_grads.add(("gradmat", layer, q))
             ok = self.cache.put(
-                key, buf, dirty=True, spill_name=name, spill_row0=a0
+                key, buf, dirty=True, pinned=True,
+                spill_name=name, spill_row0=a0,
             )
             if not ok:
                 # degraded mode: direct read-modify-write on storage
@@ -262,6 +315,7 @@ class SSOEngine:
                 self.counters.host_scatter_bytes += values.nbytes
                 return
         np.add.at(buf, rows_local, values)
+        self.cache.release(key)
         self.counters.host_scatter_bytes += values.nbytes
 
     def _grad_fetch(self, layer: int, p: int) -> np.ndarray:
@@ -286,6 +340,7 @@ class SSOEngine:
         plan, st = self.plan, self.storage
         n = plan.n_nodes
         L = self.n_layers
+        rt = self._rt
         loss_fn = self._loss_grad()
         # grad files per layer (lazily zero-filled via materialization set)
         for l in range(L + 1):
@@ -322,15 +377,21 @@ class SSOEngine:
         for l in range(L - 1, -1, -1):
             bwd = self._bwd(activate=(l < L - 1))
             dW_acc = None
-            for p in plan.schedule:
-                u = plan.unit(p)
+            units = [plan.unit(p) for p in plan.schedule]
+            if self.mode == "regather":
+                gather_fn = lambda u, _l=l: self._gather_padded(
+                    _l, u, "regather"
+                )
+                prefetch_fn = (
+                    (lambda u, _l=l: self._prefetch_unit(_l, u))
+                    if self.pipeline.enabled else None
+                )
+            else:
+                gather_fn = lambda u, _l=l: self._snapshot_get(_l, u.p, u)
+                prefetch_fn = None
+            for u, ga in rt.run_stream(units, gather_fn, prefetch_fn):
                 with PhaseTimer(self.counters, "grad_fetch"):
-                    d_out = self._grad_fetch(l + 1, p)
-                if self.mode == "regather":
-                    with PhaseTimer(self.counters, "regather"):
-                        ga = self._gather_padded(l, u)
-                else:
-                    ga = self._snapshot_get(l, p, u)
+                    d_out = self._grad_fetch(l + 1, u.p)
                 with PhaseTimer(self.counters, "compute_bwd"):
                     self.counters.h2d_bytes += ga.nbytes + d_out.nbytes
                     dp, dga = bwd(
@@ -343,6 +404,7 @@ class SSOEngine:
                     )
                     dga_np = np.asarray(dga[: u.n_req])
                     self.counters.d2h_bytes += dga_np.nbytes
+                rt.pool.release(ga)
                 if l > 0:
                     # scatter ∇GA rows back to their source partitions
                     with PhaseTimer(self.counters, "scatter"):
@@ -371,5 +433,4 @@ class SSOEngine:
         return loss, grads
 
     def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=False)
+        self._rt.close()

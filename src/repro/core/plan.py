@@ -83,6 +83,23 @@ class PartitionPlan:
     def unit(self, p: int) -> WorkUnit:
         return self.units[p]
 
+    def lookahead(self, i: int, depth: int) -> List[WorkUnit]:
+        """Work units at schedule positions ``i+1 .. i+depth`` — what the
+        pipeline prefetcher should be staging while position ``i`` computes."""
+        if depth <= 0:
+            return []
+        return [self.units[p] for p in self.schedule[i + 1 : i + 1 + depth]]
+
+    def upcoming_parts(self, i: int, depth: int) -> np.ndarray:
+        """Sorted union of source partitions required by the next ``depth``
+        scheduled units after position ``i`` — the prefetch working set a
+        depth-``depth`` pipeline keeps resident (reported by
+        benchmarks/pipeline_overlap.py for sizing cache budgets)."""
+        parts: set = set()
+        for u in self.lookahead(i, depth):
+            parts.update(int(q) for q in u.req_parts)
+        return np.array(sorted(parts), np.int32)
+
 
 def build_plan(
     g: CSRGraph,

@@ -8,11 +8,22 @@ reads that suffer 16 KiB-page read amplification, §4 / Appendix F).
 
 Counters record both logical bytes and page-rounded physical bytes so the
 read-amplification claims can be validated numerically.
+
+Thread-safety: the pipeline runtime (repro/runtime/) issues reads from
+prefetch workers and writes from the write-behind thread concurrently with
+the main loop. Ranged memmap accesses to disjoint regions are safe; the
+lock here guards the array/metadata dicts and the counter updates.
+``StorageIOQueue`` is the asynchronous front end: a dedicated I/O thread
+services a FIFO of read/write requests with byte-based write backpressure.
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import os
 import shutil
+import threading
+import time
+from collections import deque
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -34,6 +45,7 @@ class StorageTier:
         self.counters = counters or Counters()
         self._arrays: Dict[str, np.memmap] = {}
         self._meta: Dict[str, Tuple[tuple, np.dtype]] = {}
+        self._lock = threading.Lock()
         os.makedirs(root, exist_ok=True)
 
     # -- lifecycle ----------------------------------------------------------
@@ -43,28 +55,32 @@ class StorageTier:
     def alloc(self, name: str, shape: tuple, dtype=np.float32) -> None:
         dtype = np.dtype(dtype)
         mm = np.memmap(self._path(name), dtype=dtype, mode="w+", shape=shape)
-        self._arrays[name] = mm
-        self._meta[name] = (shape, dtype)
+        with self._lock:
+            self._arrays[name] = mm
+            self._meta[name] = (shape, dtype)
 
     def exists(self, name: str) -> bool:
         return name in self._arrays
 
     def free(self, name: str) -> None:
-        if name in self._arrays:
+        with self._lock:
+            if name not in self._arrays:
+                return
             mm = self._arrays.pop(name)
             del mm
             self._meta.pop(name)
-            try:
-                os.remove(self._path(name))
-            except OSError:
-                pass
+        try:
+            os.remove(self._path(name))
+        except OSError:
+            pass
 
     def shape(self, name: str) -> tuple:
         return self._meta[name][0]
 
     def close(self) -> None:
-        self._arrays.clear()
-        self._meta.clear()
+        with self._lock:
+            self._arrays.clear()
+            self._meta.clear()
         shutil.rmtree(self.root, ignore_errors=True)
 
     # -- I/O ----------------------------------------------------------------
@@ -76,18 +92,20 @@ class StorageTier:
         mm[row0 : row0 + arr.shape[0]] = arr
         nb = arr.nbytes
         c = self.counters
-        c.storage_write_bytes += nb
-        c.storage_write_paged_bytes += self._paged(nb)
-        c.storage_write_ops += 1
+        with self._lock:
+            c.storage_write_bytes += nb
+            c.storage_write_paged_bytes += self._paged(nb)
+            c.storage_write_ops += 1
 
     def read_rows(self, name: str, row0: int, row1: int) -> np.ndarray:
         mm = self._arrays[name]
         out = np.array(mm[row0:row1])  # copy out of the mapping
         nb = out.nbytes
         c = self.counters
-        c.storage_read_bytes += nb
-        c.storage_read_paged_bytes += self._paged(nb)
-        c.storage_read_ops += 1
+        with self._lock:
+            c.storage_read_bytes += nb
+            c.storage_read_paged_bytes += self._paged(nb)
+            c.storage_read_ops += 1
         return out
 
     def read_rows_scattered(self, name: str, rows: np.ndarray) -> np.ndarray:
@@ -99,13 +117,159 @@ class StorageTier:
         """
         mm = self._arrays[name]
         out = np.array(mm[rows])
-        row_bytes = out.nbytes // max(len(rows), 1)
+        if len(rows) == 0:
+            # nothing was touched on the device: no ops, no paged bytes
+            return out
         # contiguous runs
-        runs = 1 + int(np.sum(np.diff(np.sort(rows)) > 1)) if len(rows) else 0
+        runs = 1 + int(np.sum(np.diff(np.sort(rows)) > 1))
         c = self.counters
-        c.storage_read_bytes += out.nbytes
-        c.storage_read_paged_bytes += max(
-            runs * self.page, self._paged(out.nbytes)
-        )
-        c.storage_read_ops += max(runs, 1)
+        with self._lock:
+            c.storage_read_bytes += out.nbytes
+            c.storage_read_paged_bytes += max(
+                runs * self.page, self._paged(out.nbytes)
+            )
+            c.storage_read_ops += runs
         return out
+
+
+class StorageIOQueue:
+    """Thread-safe asynchronous front end over a :class:`StorageTier`.
+
+    A single dedicated I/O thread services a FIFO of read/write requests,
+    each returning a future. Writers are backpressured: ``submit_write``
+    blocks while the queued-but-unwritten bytes would exceed
+    ``max_inflight_bytes`` (a single over-sized write is admitted when the
+    queue is empty so it cannot deadlock). Blocked time is charged to the
+    ``write_submit`` stall counter — this is the write-behind stage of the
+    pipeline runtime.
+    """
+
+    _CLOSE = object()
+
+    def __init__(
+        self,
+        tier: StorageTier,
+        max_inflight_bytes: int = 64 << 20,
+        counters: Optional[Counters] = None,
+    ):
+        self.tier = tier
+        self.max_inflight = int(max_inflight_bytes)
+        self.counters = counters or tier.counters
+        self._cond = threading.Condition()
+        self._q: deque = deque()
+        self._inflight_bytes = 0
+        self._inflight_ops = 0
+        self.max_inflight_observed = 0
+        self._closed = False
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, name="sso-io", daemon=True
+        )
+        self._thread.start()
+
+    # -- submission ---------------------------------------------------------
+    @property
+    def inflight_bytes(self) -> int:
+        return self._inflight_bytes
+
+    def submit_write(self, name: str, row0: int, arr: np.ndarray) -> cf.Future:
+        """Queue a ranged write. The caller must not mutate ``arr`` after
+        submission (the queue does not copy)."""
+        nb = int(arr.nbytes)
+        t0 = time.perf_counter()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("StorageIOQueue is closed")
+            while (
+                self._inflight_bytes > 0
+                and self._inflight_bytes + nb > self.max_inflight
+            ):
+                self._cond.wait(0.05)
+                if self._exc is not None:
+                    raise self._exc
+            fut: cf.Future = cf.Future()
+            self._q.append(("w", name, row0, arr, None, fut))
+            self._inflight_bytes += nb
+            self._inflight_ops += 1
+            self.max_inflight_observed = max(
+                self.max_inflight_observed, self._inflight_bytes
+            )
+            self._cond.notify_all()
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall("write_submit", stall)
+        return fut
+
+    def submit_read(self, name: str, row0: int, row1: int) -> cf.Future:
+        """Queue a ranged read; the future resolves to the array."""
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("StorageIOQueue is closed")
+            fut: cf.Future = cf.Future()
+            self._q.append(("r", name, row0, row1, None, fut))
+            self._inflight_ops += 1
+            self._cond.notify_all()
+        return fut
+
+    # -- service thread -----------------------------------------------------
+    def _run(self):
+        while True:
+            with self._cond:
+                while not self._q:
+                    self._cond.wait(0.05)
+                item = self._q.popleft()
+            if item is StorageIOQueue._CLOSE:
+                return
+            kind, name, a, b, _, fut = item
+            t0 = time.perf_counter()
+            try:
+                if kind == "w":
+                    self.tier.write_rows(name, a, b)
+                    res = None
+                else:
+                    res = self.tier.read_rows(name, a, b)
+            except BaseException as e:  # surface on drain() and futures
+                with self._cond:
+                    self._exc = e
+                    if kind == "w":
+                        self._inflight_bytes -= int(b.nbytes)
+                    self._inflight_ops -= 1
+                    self._cond.notify_all()
+                fut.set_exception(e)
+                continue
+            self.counters.record_busy(
+                "write_behind" if kind == "w" else "async_read",
+                time.perf_counter() - t0,
+            )
+            with self._cond:
+                if kind == "w":
+                    self._inflight_bytes -= int(b.nbytes)
+                self._inflight_ops -= 1
+                self._cond.notify_all()
+            fut.set_result(res)
+
+    # -- barriers -----------------------------------------------------------
+    def drain(self) -> None:
+        """Block until every submitted request has been serviced."""
+        t0 = time.perf_counter()
+        with self._cond:
+            while self._q or self._inflight_ops > 0:
+                self._cond.wait(0.05)
+            if self._exc is not None:
+                exc, self._exc = self._exc, None
+                raise exc
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall("write_drain", stall)
+
+    def close(self) -> None:
+        """Flush all pending writes, then stop the I/O thread."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+        self.drain()
+        with self._cond:
+            self._q.append(StorageIOQueue._CLOSE)
+            self._cond.notify_all()
+        self._thread.join(timeout=5)

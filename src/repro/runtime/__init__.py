@@ -1,0 +1,14 @@
+"""Async pipelined I/O runtime for the SSO engine (see README.md here).
+
+Stages: storage-read/prefetch -> host gather -> device compute -> bypass
+write-behind, over bounded queues with stall/overlap accounting in
+:class:`repro.core.counters.Counters`.
+"""
+from repro.runtime.config import PipelineConfig
+from repro.runtime.executor import BufferPool, PipelineExecutor
+from repro.runtime.queues import DONE, PipelineAbort, StageQueue
+
+__all__ = [
+    "PipelineConfig", "PipelineExecutor", "BufferPool",
+    "StageQueue", "PipelineAbort", "DONE",
+]

@@ -1,0 +1,46 @@
+"""Pipeline runtime configuration (knobs for the async SSO executor)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    """Knobs for the asynchronous cache-(re)gather-bypass pipeline.
+
+    depth
+        Lookahead in work units: how many units ahead of the one currently
+        computing may be in the prefetch/gather stages. ``0`` disables the
+        pipeline entirely — the engine runs the exact serial schedule the
+        equivalence tests pin down. ``1`` is classic double buffering.
+    queue_capacity
+        Capacity of each bounded stage queue (defaults to ``depth``). Also
+        bounds the number of live gather output buffers to
+        ``queue_capacity + 1`` per shape bucket.
+    write_behind
+        Route bypass writes through the storage I/O queue instead of
+        blocking the compute loop on them.
+    max_inflight_write_bytes
+        Write-behind backpressure: ``submit_write`` blocks once this many
+        bytes are queued but not yet on storage.
+    pin_prefetched
+        Pin prefetched partitions in the host cache until their gather
+        consumes them, so cache pressure can't evict an in-flight working
+        set (pins are counted; over-budget prefetches degrade to bypass).
+    """
+
+    depth: int = 0
+    queue_capacity: Optional[int] = None
+    write_behind: bool = True
+    max_inflight_write_bytes: int = 64 << 20
+    pin_prefetched: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.depth > 0
+
+    @property
+    def capacity(self) -> int:
+        cap = self.queue_capacity if self.queue_capacity is not None else self.depth
+        return max(1, int(cap))

@@ -1,0 +1,201 @@
+"""Asynchronous pipelined I/O runtime for the SSO engine (paper Fig. 13).
+
+Turns each per-partition work unit into a multi-stage job
+
+    storage-read / prefetch  ->  host gather  ->  device compute  ->  bypass
+         (worker thread)        (worker thread)     (main loop)     write-behind
+                                                                    (I/O thread)
+
+flowing through bounded stage queues. The compute stage stays on the caller
+thread and consumes gathered buffers strictly in schedule order, so a
+pipelined run executes the exact same floating-point program as the serial
+one — ``depth=0`` *is* the serial engine, and ``depth>=1`` is bit-identical
+to it (asserted by the equivalence tests). What the pipeline changes is only
+*when* the I/O happens: partition reads and host gathers for units
+``i+1..i+depth`` run while unit ``i`` computes, and bypass writes retire on
+the storage I/O queue behind the compute.
+
+Gather outputs are recycled through a :class:`BufferPool` — with ``depth=1``
+this is classic double buffering (one buffer on device feed, one being
+assembled), and queue capacity bounds live buffers at ``capacity + 1`` per
+shape bucket.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from typing import Callable, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.cache import HostCache
+from repro.core.counters import Counters
+from repro.core.storage import StorageIOQueue, StorageTier
+from repro.runtime.config import PipelineConfig
+from repro.runtime.queues import DONE, PipelineAbort, StageQueue
+
+
+class BufferPool:
+    """Reusable host-side gather output buffers, keyed by (shape, dtype).
+
+    The plan's pow2 padding buckets mean a handful of distinct shapes per
+    layer, so recycling eliminates nearly all steady-state allocation. The
+    free list is unbounded but the pipeline's bounded queues keep at most
+    ``capacity + 1`` buffers of a shape in flight."""
+
+    def __init__(self):
+        self._free = defaultdict(list)
+        self._lock = threading.Lock()
+        self.allocations = 0   # fresh np.zeros calls (for tests/telemetry)
+
+    def acquire(self, shape: tuple, dtype) -> np.ndarray:
+        key = (tuple(shape), np.dtype(dtype).str)
+        with self._lock:
+            lst = self._free.get(key)
+            if lst:
+                return lst.pop()
+            self.allocations += 1
+        return np.zeros(shape, dtype)
+
+    def release(self, arr: np.ndarray) -> None:
+        key = (arr.shape, arr.dtype.str)
+        with self._lock:
+            self._free[key].append(arr)
+
+
+class PipelineExecutor:
+    """Drives work units through prefetch/gather worker stages and hands the
+    main loop (item, gathered-buffer) pairs in schedule order; owns the
+    write-behind storage queue for the bypass stage."""
+
+    def __init__(
+        self,
+        cfg: PipelineConfig,
+        counters: Counters,
+        storage: StorageTier,
+        cache: Optional[HostCache] = None,
+    ):
+        self.cfg = cfg
+        self.counters = counters
+        self.storage = storage
+        self.cache = cache
+        self.pool = BufferPool()
+        self._writer: Optional[StorageIOQueue] = None
+        if cfg.enabled and cfg.write_behind:
+            self._writer = StorageIOQueue(
+                storage,
+                max_inflight_bytes=cfg.max_inflight_write_bytes,
+                counters=counters,
+            )
+        self._closed = False
+
+    # ------------------------------------------------------------ bypass I/O
+    @property
+    def writer(self) -> Optional[StorageIOQueue]:
+        return self._writer
+
+    def write_rows(self, name: str, row0: int, arr: np.ndarray) -> None:
+        """Bypass write: write-behind when pipelined, synchronous otherwise.
+        Pipelined callers must hand over ownership of ``arr`` (no copy)."""
+        if self._writer is not None:
+            self._writer.submit_write(name, row0, arr)
+        else:
+            self.storage.write_rows(name, row0, arr)
+
+    def drain_writes(self) -> None:
+        """Barrier: all submitted bypass writes are on storage. Called at
+        layer boundaries, before anything reads the freshly written file."""
+        if self._writer is not None:
+            self._writer.drain()
+
+    # -------------------------------------------------------------- pipeline
+    def run_stream(
+        self,
+        items: Iterable,
+        gather_fn: Callable,
+        prefetch_fn: Optional[Callable] = None,
+    ):
+        """Yield ``(item, gather_fn(item))`` in input order.
+
+        Serial (``depth=0``): gather runs inline on the caller thread.
+        Pipelined: a prefetch worker runs ``prefetch_fn`` up to ``depth``
+        units ahead (stage-1 storage reads, cache pinning) and a gather
+        worker assembles buffers (stage-2) into a bounded queue the caller
+        drains; caller wait time is charged to the ``compute_wait`` stall.
+        """
+        items = list(items)
+        if not self.cfg.enabled or len(items) <= 1:
+            for it in items:
+                yield it, gather_fn(it)
+            return
+
+        c = self.counters
+        abort = threading.Event()
+        q_ready = StageQueue("prefetch_out", self.cfg.capacity, c, abort)
+        q_out = StageQueue("gather_out", self.cfg.capacity, c, abort)
+        errors: List[BaseException] = []
+
+        def _prefetch_worker():
+            try:
+                for it in items:
+                    if prefetch_fn is not None:
+                        t0 = time.perf_counter()
+                        prefetch_fn(it)
+                        c.record_busy("prefetch", time.perf_counter() - t0)
+                    q_ready.put(it)
+                q_ready.put(DONE)
+            except PipelineAbort:
+                pass
+            except BaseException as e:
+                errors.append(e)
+                abort.set()
+
+        def _gather_worker():
+            try:
+                while True:
+                    it = q_ready.get()
+                    if it is DONE:
+                        q_out.put(DONE)
+                        return
+                    t0 = time.perf_counter()
+                    buf = gather_fn(it)
+                    c.record_busy("gather", time.perf_counter() - t0)
+                    q_out.put((it, buf))
+            except PipelineAbort:
+                pass
+            except BaseException as e:
+                errors.append(e)
+                abort.set()
+
+        tp = threading.Thread(
+            target=_prefetch_worker, name="sso-prefetch", daemon=True
+        )
+        tg = threading.Thread(
+            target=_gather_worker, name="sso-gather", daemon=True
+        )
+        tp.start()
+        tg.start()
+        try:
+            while True:
+                try:
+                    x = q_out.get(stall_name="compute_wait")
+                except PipelineAbort:
+                    break
+                if x is DONE:
+                    break
+                yield x
+        finally:
+            abort.set()
+            tp.join(timeout=5)
+            tg.join(timeout=5)
+            if errors:
+                raise errors[0]
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._writer is not None:
+            self._writer.close()

@@ -1,0 +1,69 @@
+"""Bounded stage queues with stall accounting for the pipeline runtime.
+
+Each queue sits between two pipeline stages. ``put``/``get`` block when the
+queue is full/empty — that blocked time IS the pipeline's stall signal, so
+both are timed and charged to the owning :class:`~repro.core.counters.Counters`
+under ``<name>.put`` / ``<name>.get`` (the executor maps the main loop's
+``get`` onto the ``compute_wait`` stall instead).
+
+An abort event (set when any stage raises, or when the consumer abandons the
+stream) wakes every blocked producer/consumer so a failing pipeline tears
+down instead of deadlocking on a full queue.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Optional
+
+from repro.core.counters import Counters
+
+DONE = object()  # end-of-stream sentinel flowing through every stage
+
+
+class PipelineAbort(Exception):
+    """Raised inside a stage blocked on a queue when the pipeline aborts."""
+
+
+class StageQueue:
+    def __init__(
+        self,
+        name: str,
+        capacity: int,
+        counters: Counters,
+        abort: threading.Event,
+    ):
+        self.name = name
+        self.counters = counters
+        self.abort = abort
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, capacity))
+
+    def put(self, item, stall_name: Optional[str] = None) -> None:
+        t0 = time.perf_counter()
+        while True:
+            if self.abort.is_set():
+                raise PipelineAbort(self.name)
+            try:
+                self._q.put(item, timeout=0.02)
+                break
+            except queue.Full:
+                continue
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall(stall_name or f"{self.name}.put", stall)
+
+    def get(self, stall_name: Optional[str] = None):
+        t0 = time.perf_counter()
+        while True:
+            try:
+                item = self._q.get(timeout=0.02)
+                break
+            except queue.Empty:
+                if self.abort.is_set():
+                    raise PipelineAbort(self.name)
+                continue
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall(stall_name or f"{self.name}.get", stall)
+        return item

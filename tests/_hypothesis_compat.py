@@ -1,0 +1,71 @@
+"""Optional-import shim for ``hypothesis``.
+
+When hypothesis is installed (CI: see requirements-dev.txt) this re-exports
+the real API unchanged. When it is not, ``@given`` degrades to running the
+test body over a small deterministic example set drawn from each strategy
+(property tests become parametrized spot checks instead of erroring the
+whole module at collection time).
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+            assert self.examples, "strategy needs at least one example"
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def sampled_from(values):
+            return _Strategy(values)
+
+        @staticmethod
+        def integers(min_value=0, max_value=10):
+            lo, hi = int(min_value), int(max_value)
+            return _Strategy(sorted({lo, (lo + hi) // 2, hi}))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(sorted({lo, (lo + hi) / 2.0, hi}))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._shim_settings = dict(kwargs)
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            cfg = getattr(fn, "_shim_settings", {})
+            n = max(len(s.examples) for s in strats.values())
+            max_ex = cfg.get("max_examples")
+            if max_ex:
+                n = min(n, int(max_ex))
+
+            # plain *args wrapper: pytest must not mistake the strategy
+            # kwargs for fixtures (``self`` still flows through for methods)
+            def wrapper(*args):
+                for i in range(n):
+                    kw = {
+                        k: s.examples[i % len(s.examples)]
+                        for k, s in strats.items()
+                    }
+                    fn(*args, **kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

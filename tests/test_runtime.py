@@ -1,0 +1,320 @@
+"""Pipeline runtime tests (repro/runtime/ + the cache/storage APIs it needs).
+
+The load-bearing property: a pipelined engine (depth >= 1) executes the exact
+same floating-point program as the serial engine (depth == 0) — loss and
+gradients are bit-identical, in both regather and snapshot modes, even under
+cache thrashing. Plus: write-behind flushes on close, backpressure caps
+in-flight bytes, pin/prefetch semantics, dirty-replacement flush, and plan
+lookahead.
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Counters, HostCache, SSOEngine, StorageIOQueue, StorageTier, build_plan,
+)
+from repro.graph import (
+    gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
+)
+from repro.graph.csr import add_self_loops
+from repro.graph.synthetic import random_features, random_labels
+from repro.models.gnn.layers import get_gnn
+from repro.runtime import BufferPool, PipelineConfig
+
+
+def _setup(n_nodes=900, n_parts=5, d_in=16, seed=0):
+    g = add_self_loops(kronecker_graph(n_nodes, 7, seed=seed))
+    res = switching_aware_partition(g, n_parts, max_iters=8, seed=seed)
+    plan = build_plan(g, res.parts, n_parts, edge_weight=gcn_norm_coeffs(g))
+    X = random_features(g.n_nodes, d_in, seed)
+    Y = random_labels(g.n_nodes, 8, seed)
+    return plan, X[plan.ro.perm], Y[plan.ro.perm]
+
+
+def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1):
+    spec = get_gnn("gcn")
+    params = spec.init(jax.random.PRNGKey(0), dims[0], dims[1], dims[-1],
+                       len(dims) - 1)
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    cache = HostCache(budget_kb << 10, st_, c)
+    eng = SSOEngine(
+        spec, plan, dims, st_, cache, c, mode=mode,
+        pipeline=PipelineConfig(depth=depth),
+    )
+    eng.initialize(Xr)
+    for _ in range(epochs):
+        loss, grads = eng.run_epoch(params, Yr)
+    eng.close()
+    st_.close()
+    return loss, grads, c
+
+
+def _assert_trees_identical(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------- engine equivalence
+@pytest.mark.parametrize("mode", ["regather", "snapshot"])
+@pytest.mark.parametrize("depth", [1, 3])
+def test_pipelined_matches_serial_exactly(mode, depth):
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, mode, depth=0)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=depth)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+    if mode == "regather":
+        # the pipeline stages really ran on workers
+        assert c1.stage_busy_seconds.get("gather", 0.0) > 0.0
+        assert c1.cache_prefetches > 0
+
+
+def test_pipelined_matches_serial_under_thrash():
+    """Tight budget: eviction/pin/bypass/degraded-spill paths all engage and
+    must not change the math."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, "regather", depth=0, budget_kb=64)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, "regather", depth=2, budget_kb=64)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+    assert c1.cache_evictions > 0  # it really did thrash
+
+
+def test_pipelined_multi_epoch_stable():
+    """Buffer-pool recycling across epochs must not leak state between runs."""
+    plan, Xr, Yr = _setup(n_nodes=500, n_parts=4)
+    dims = [16, 16, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, "regather", depth=0, epochs=3)
+    l1, g1, _ = _run(plan, Xr, Yr, dims, "regather", depth=2, epochs=3)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_epoch2_sees_new_params(depth):
+    """Regression: cached act{l} partitions from epoch 1 must be invalidated
+    once the forward rewrites the layer — otherwise epoch 2 with UPDATED
+    params gathers epoch-1 activations and silently trains on stale state."""
+    plan, Xr, Yr = _setup(n_nodes=500, n_parts=4)
+    dims = [16, 16, 8]
+    spec = get_gnn("gcn")
+    params_a = spec.init(jax.random.PRNGKey(0), 16, 16, 8, 2)
+    params_b = spec.init(jax.random.PRNGKey(1), 16, 16, 8, 2)
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    cache = HostCache(64 << 20, st_, c)  # ample budget: everything caches
+    eng = SSOEngine(spec, plan, dims, st_, cache, c,
+                    pipeline=PipelineConfig(depth=depth))
+    eng.initialize(Xr)
+    eng.run_epoch(params_a, Yr)
+    loss_b, grads_b = eng.run_epoch(params_b, Yr)
+    eng.close()
+    st_.close()
+    # oracle: a fresh engine that never saw params_a
+    c2 = Counters()
+    st2 = StorageTier(tempfile.mkdtemp(), counters=c2)
+    eng2 = SSOEngine(spec, plan, dims, st2, HostCache(64 << 20, st2, c2), c2,
+                     pipeline=PipelineConfig(depth=depth))
+    eng2.initialize(Xr)
+    loss_ref, grads_ref = eng2.run_epoch(params_b, Yr)
+    eng2.close()
+    st2.close()
+    assert loss_b == loss_ref
+    _assert_trees_identical(grads_b, grads_ref)
+
+
+def test_overlap_accounting():
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    t0 = time.perf_counter()
+    _, _, c = _run(plan, Xr, Yr, dims, "regather", depth=2)
+    wall = time.perf_counter() - t0
+    s = c.overlap_summary(wall)
+    assert s["busy_seconds"] > 0.0
+    assert 0.0 <= s["overlapped_frac"] <= 1.0
+    snap = c.snapshot()
+    assert any(k.startswith("busy_") for k in snap)
+
+
+# ------------------------------------------------------------- StorageIOQueue
+def test_write_behind_flushes_on_close(rng):
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (64, 8), np.float32)
+    data = rng.standard_normal((64, 8)).astype(np.float32)
+    q = StorageIOQueue(st_, counters=c)
+    for i in range(8):
+        q.submit_write("a", i * 8, data[i * 8 : (i + 1) * 8].copy())
+    q.close()
+    np.testing.assert_array_equal(st_.read_rows("a", 0, 64), data)
+    with pytest.raises(RuntimeError):
+        q.submit_write("a", 0, data[:8])
+    st_.close()
+
+
+def test_backpressure_caps_inflight_bytes(rng):
+    class SlowTier(StorageTier):
+        def write_rows(self, name, row0, arr):
+            time.sleep(0.003)
+            super().write_rows(name, row0, arr)
+
+    c = Counters()
+    st_ = SlowTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (1024, 64), np.float32)
+    row = rng.standard_normal((4, 64)).astype(np.float32)  # 1 KiB
+    cap = 3 * row.nbytes
+    q = StorageIOQueue(st_, max_inflight_bytes=cap, counters=c)
+    for i in range(32):
+        q.submit_write("a", i * 4, row.copy())
+    q.close()
+    assert q.max_inflight_observed <= cap
+    assert c.stage_stall_seconds.get("write_submit", 0.0) > 0.0
+    st_.close()
+
+
+def test_async_read_roundtrip(rng):
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (32, 4), np.float32)
+    x = rng.standard_normal((32, 4)).astype(np.float32)
+    q = StorageIOQueue(st_, counters=c)
+    q.submit_write("a", 0, x)
+    fut = q.submit_read("a", 8, 16)
+    np.testing.assert_array_equal(fut.result(timeout=5), x[8:16])
+    q.close()
+    st_.close()
+
+
+# ------------------------------------------------------ cache pin / prefetch
+def _mk_cache(budget):
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("back", (1024, 64), np.float32)
+    return HostCache(budget, st_, c), st_, c
+
+
+def test_prefetch_pin_blocks_eviction(rng):
+    entry = rng.standard_normal((64, 64)).astype(np.float32)  # 16 KiB
+    cache, st_, c = _mk_cache(int(entry.nbytes * 2.5))
+    assert cache.prefetch(("act", 0, 0), loader=lambda: entry.copy(), pin=True)
+    assert c.cache_prefetches == 1
+    # pressure: two more entries want the space
+    cache.get(("act", 1, 0), loader=lambda: entry.copy())
+    cache.get(("act", 2, 0), loader=lambda: entry.copy())
+    assert cache.contains(("act", 0, 0))  # pinned survived
+    cache.unpin(("act", 0, 0))
+    cache.get(("act", 3, 0), loader=lambda: entry.copy())
+    cache.get(("act", 4, 0), loader=lambda: entry.copy())
+    assert not cache.contains(("act", 0, 0))  # unpinned got evicted
+    st_.close()
+
+
+def test_pin_counts_compose(rng):
+    entry = rng.standard_normal((16, 64)).astype(np.float32)
+    cache, st_, _ = _mk_cache(1 << 20)
+    cache.prefetch(("act", 0, 0), loader=lambda: entry, pin=True)
+    assert cache.pin(("act", 0, 0))        # second holder
+    cache.unpin(("act", 0, 0))             # first release: still pinned
+    assert cache._entries[("act", 0, 0)].pinned == 1
+    cache.unpin(("act", 0, 0))
+    assert cache._entries[("act", 0, 0)].pinned == 0
+    cache.unpin(("act", 0, 0))             # floor at zero
+    assert cache._entries[("act", 0, 0)].pinned == 0
+    assert not cache.pin(("missing", 0, 0))
+    st_.close()
+
+
+def test_acquire_release(rng):
+    entry = rng.standard_normal((16, 64)).astype(np.float32)
+    cache, st_, _ = _mk_cache(1 << 20)
+    assert cache.acquire(("grad", 0, 0)) is None
+    cache.put(("grad", 0, 0), entry, dirty=True, spill_name="back")
+    arr = cache.acquire(("grad", 0, 0))
+    np.testing.assert_array_equal(arr, entry)
+    assert cache._entries[("grad", 0, 0)].pinned == 1
+    cache.release(("grad", 0, 0))
+    assert cache._entries[("grad", 0, 0)].pinned == 0
+    st_.close()
+
+
+def test_put_replacing_dirty_entry_flushes_first(rng):
+    """Regression: replacing a dirty entry used to silently drop its
+    unflushed data."""
+    cache, st_, _ = _mk_cache(1 << 20)
+    a = np.full((32, 64), 3.0, np.float32)
+    b = np.full((32, 64), 7.0, np.float32)
+    cache.put(("grad", 0, 0), a, dirty=True, spill_name="back", spill_row0=0)
+    cache.put(("grad", 0, 0), b, dirty=False)  # clean replacement
+    got = st_.read_rows("back", 0, 32)
+    np.testing.assert_array_equal(got, a)      # old dirty data was flushed
+    np.testing.assert_array_equal(cache.peek(("grad", 0, 0)), b)
+    st_.close()
+
+
+# ------------------------------------------------------- storage satellites
+def test_scattered_empty_read_not_charged():
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (128, 16), np.float32)
+    out = st_.read_rows_scattered("a", np.array([], np.int64))
+    assert out.shape[0] == 0
+    assert c.storage_read_ops == 0
+    assert c.storage_read_bytes == 0
+    assert c.storage_read_paged_bytes == 0
+    st_.close()
+
+
+# ------------------------------------------------------------ plan lookahead
+def test_plan_lookahead_and_upcoming_parts():
+    plan, _, _ = _setup(n_nodes=600, n_parts=4)
+    sched = plan.schedule
+    la = plan.lookahead(0, 2)
+    assert [u.p for u in la] == sched[1:3]
+    assert plan.lookahead(0, 0) == []
+    assert plan.lookahead(len(sched) - 1, 3) == []  # truncates at the end
+    up = plan.upcoming_parts(0, 2)
+    expect = sorted(
+        {int(q) for u in la for q in u.req_parts}
+    )
+    assert up.tolist() == expect
+    assert plan.upcoming_parts(len(sched) - 1, 2).size == 0
+
+
+# --------------------------------------------------------------- buffer pool
+def test_buffer_pool_recycles():
+    pool = BufferPool()
+    a = pool.acquire((8, 4), np.float32)
+    pool.release(a)
+    b = pool.acquire((8, 4), np.float32)
+    assert b is a
+    assert pool.allocations == 1
+    cdiff = pool.acquire((8, 8), np.float32)
+    assert cdiff is not a
+    assert pool.allocations == 2
+
+
+# ----------------------------------------------------------- error handling
+def test_pipeline_stage_error_propagates():
+    from repro.runtime import PipelineExecutor
+
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    rt = PipelineExecutor(PipelineConfig(depth=2), c, st_)
+
+    def bad_gather(it):
+        raise ValueError(f"boom {it}")
+
+    with pytest.raises(ValueError, match="boom"):
+        for _ in rt.run_stream(list(range(8)), bad_gather):
+            pass
+    rt.close()
+    st_.close()
