@@ -74,18 +74,28 @@ class EmulatedNVMeTier(StorageTier):
         self._delay(out.nbytes)
         return out
 
+    def read_rows_batched(self, requests):
+        # a vectored submission pays the fixed per-op latency ONCE for the
+        # whole batch (plus the bandwidth term for the total bytes) — the
+        # win the pipeline's batched prefetch is after
+        outs = super().read_rows_batched(requests)
+        if outs:
+            self._delay(sum(o.nbytes for o in outs))
+        return outs
+
 
 def run_engine_epoch(
     wl: Dict, mode: str, cache_bytes: int, epochs: int = 1,
     overlap: bool = False, pipeline_depth: int = 0,
     storage_latency_us: float = 0.0, storage_gbps: float = 0.0,
-    per_epoch_walls: bool = False,
+    per_epoch_walls: bool = False, gather_workers: int = 1,
 ):
     """Returns (wall_s_per_epoch, modeled_s_per_epoch, counters).
 
     ``pipeline_depth`` > 0 runs the async runtime (repro/runtime/);
     ``overlap`` is the legacy knob for depth=1. Nonzero
-    ``storage_latency_us``/``storage_gbps`` emulate an NVMe tier."""
+    ``storage_latency_us``/``storage_gbps`` emulate an NVMe tier.
+    ``gather_workers`` shards the pipelined host gather."""
     from repro.runtime import PipelineConfig
 
     c = Counters()
@@ -100,7 +110,7 @@ def run_engine_epoch(
     depth = pipeline_depth if pipeline_depth > 0 else (1 if overlap else 0)
     eng = SSOEngine(
         wl["spec"], wl["plan"], wl["dims"], st_, cache, c, mode=mode,
-        pipeline=PipelineConfig(depth=depth),
+        pipeline=PipelineConfig(depth=depth, gather_workers=gather_workers),
     )
     eng.initialize(wl["X"])
     # warmup epoch compiles the jitted layer fns

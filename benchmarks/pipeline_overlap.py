@@ -3,20 +3,26 @@
 The paper's headline mechanism (§5, Fig. 13) is hiding storage/host traffic
 behind device compute. This benchmark runs the same workload through the
 engine at pipeline depth 0 (strict serial) and depth N (async runtime:
-prefetch → gather workers + write-behind), and reports per-epoch wall time,
-the per-stage busy/stall accounting from Counters, and the overlapped
-fraction. Loss equality between the two runs is asserted — the pipeline must
-not change the math.
+prefetch → gather workers + aux grad fetch + write-behind), and reports
+per-epoch wall time, the per-stage busy/stall accounting from Counters, the
+overlapped fraction split into forward and backward passes, and the storage
+read-op counts (the pipelined run batches per-unit prefetch reads into one
+vectored submission, so it issues fewer ops for the same bytes). Loss
+equality between the two runs is asserted — the pipeline must not change
+the math.
 
-Run:  PYTHONPATH=src python benchmarks/pipeline_overlap.py [--smoke]
+Run:  PYTHONPATH=src python benchmarks/pipeline_overlap.py [--smoke] [--json]
 CSV:  mode,ms_per_epoch,detail
+JSON: --json [PATH] writes the full comparison (default
+      BENCH_pipeline_overlap.json) for CI perf-trajectory artifacts.
 """
 import argparse
+import json
 import sys
 import time
 
 
-def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps):
+def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers):
     from benchmarks.common import run_engine_epoch
 
     out = {}
@@ -24,7 +30,7 @@ def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps):
         walls, mt, c, loss = run_engine_epoch(
             wl, mode, cache_mb << 20, epochs=epochs, pipeline_depth=d,
             storage_latency_us=latency_us, storage_gbps=gbps,
-            per_epoch_walls=True,
+            per_epoch_walls=True, gather_workers=workers,
         )
         # min-of-epochs: robust to noisy-neighbour CPU spikes on shared boxes
         out[d] = dict(
@@ -41,6 +47,8 @@ def main() -> int:
     ap.add_argument("--layers", type=int, default=3)
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--gather-workers", type=int, default=1,
+                    help="parallel host-gather workers in the pipelined run")
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--cache-mb", type=int, default=8)
     ap.add_argument("--mode", default="regather",
@@ -54,6 +62,9 @@ def main() -> int:
                          "CPU-only box there is little latency to hide)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload, asserts correctness + accounting")
+    ap.add_argument("--json", nargs="?", const="BENCH_pipeline_overlap.json",
+                    default=None, metavar="PATH",
+                    help="also write the comparison as JSON (CI artifact)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -71,7 +82,8 @@ def main() -> int:
         d_hidden=args.hidden, n_layers=args.layers,
     )
     res = run_pair(wl, args.depth, args.epochs, args.cache_mb, args.mode,
-                   args.storage_latency_us, args.storage_gbps)
+                   args.storage_latency_us, args.storage_gbps,
+                   args.gather_workers)
     ser, pipe = res[0], res[args.depth]
 
     # the pipeline must not change the math
@@ -81,17 +93,23 @@ def main() -> int:
 
     ov = pipe["overlap"]
     speedup = ser["wall"] / pipe["wall"] if pipe["wall"] > 0 else float("inf")
+    ser_ops = ser["counters"].storage_read_ops
+    pipe_ops = pipe["counters"].storage_read_ops
     print("mode,ms_per_epoch,detail")
     print(f"serial,{ser['wall'] * 1e3:.1f},"
-          f"depth=0 mean={ser['mean_wall'] * 1e3:.1f}ms")
+          f"depth=0 mean={ser['mean_wall'] * 1e3:.1f}ms "
+          f"read_ops={ser_ops}")
     print(
         f"pipelined,{pipe['wall'] * 1e3:.1f},"
-        f"depth={args.depth} mean={pipe['mean_wall'] * 1e3:.1f}ms "
+        f"depth={args.depth} workers={args.gather_workers} "
+        f"mean={pipe['mean_wall'] * 1e3:.1f}ms "
         f"speedup={speedup:.2f}x "
         f"overlapped_frac={ov['overlapped_frac']:.3f} "
-        f"overlapped_s={ov['overlapped_seconds']:.3f} "
+        f"fwd={ov['overlapped_frac_fwd']:.3f} "
+        f"bwd={ov['overlapped_frac_bwd']:.3f} "
         f"busy_s={ov['busy_seconds']:.3f} "
-        f"compute_wait_s={ov['compute_wait_seconds']:.3f}"
+        f"compute_wait_s={ov['compute_wait_seconds']:.3f} "
+        f"read_ops={pipe_ops}"
     )
     c = pipe["counters"]
     for k, v in sorted(c.stage_busy_seconds.items()):
@@ -104,10 +122,49 @@ def main() -> int:
     print(f"prefetch_working_set,{sum(ws) / len(ws):.1f},"
           f"mean source partitions staged ahead at depth {args.depth}")
 
+    if args.json:
+        payload = dict(
+            config=dict(
+                nodes=args.nodes, parts=args.parts, layers=args.layers,
+                hidden=args.hidden, depth=args.depth,
+                gather_workers=args.gather_workers, epochs=args.epochs,
+                cache_mb=args.cache_mb, mode=args.mode,
+                storage_latency_us=args.storage_latency_us,
+                storage_gbps=args.storage_gbps,
+            ),
+            serial=dict(
+                wall_s=ser["wall"], mean_wall_s=ser["mean_wall"],
+                storage_read_ops=ser_ops,
+                storage_read_bytes=ser["counters"].storage_read_bytes,
+            ),
+            pipelined=dict(
+                wall_s=pipe["wall"], mean_wall_s=pipe["mean_wall"],
+                storage_read_ops=pipe_ops,
+                storage_read_bytes=c.storage_read_bytes,
+                overlap=ov,
+                stage_busy_s=dict(sorted(c.stage_busy_seconds.items())),
+                stage_stall_s=dict(sorted(c.stage_stall_seconds.items())),
+            ),
+            speedup=speedup,
+            read_ops_ratio=(pipe_ops / ser_ops) if ser_ops else None,
+        )
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"json,{args.json},written")
+
     ok = True
     if ov["overlapped_frac"] <= 0.0:
         print("WARN,0,no overlap achieved", file=sys.stderr)
         ok = not args.smoke and ok  # hard-fail only in smoke mode
+    # warn-only: both depend on thread timing (a loaded 1-2 core runner can
+    # serialize workers behind the main loop / race extra cache loads), so
+    # they must not flake CI — the deterministic properties are asserted in
+    # tests/test_runtime.py instead
+    if ov["overlapped_frac_bwd"] <= 0.0:
+        print("WARN,0,no backward overlap achieved", file=sys.stderr)
+    if pipe_ops >= ser_ops:
+        print(f"WARN,{pipe_ops},batched prefetch did not cut read ops "
+              f"(serial={ser_ops})", file=sys.stderr)
     if args.smoke and ov["busy_seconds"] <= 0.0:
         print("FAIL,0,pipeline workers recorded no busy time",
               file=sys.stderr)

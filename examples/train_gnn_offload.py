@@ -40,6 +40,9 @@ def main():
     ap.add_argument("--cache-mb", type=int, default=24)
     ap.add_argument("--pipeline-depth", type=int, default=2,
                     help="async runtime lookahead (0 = serial engine)")
+    ap.add_argument("--gather-workers", type=int, default=1,
+                    help="parallel host-gather workers (joined in schedule "
+                         "order; useful on multi-core boxes)")
     ap.add_argument("--ckpt", default="/tmp/grinnder_ckpt")
     args = ap.parse_args()
 
@@ -66,7 +69,9 @@ def main():
     cache = HostCache(args.cache_mb << 20, storage, c)
     engine = SSOEngine(spec, plan, dims, storage, cache, c,
                        mode="regather",
-                       pipeline=PipelineConfig(depth=args.pipeline_depth))
+                       pipeline=PipelineConfig(
+                           depth=args.pipeline_depth,
+                           gather_workers=args.gather_workers))
     engine.initialize(X)
 
     start = 0

@@ -72,7 +72,7 @@ class HostCache:
         if e.dirty and e.spill_name is not None:
             self.storage.write_rows(e.spill_name, e.spill_row0, e.arr)
         self._bytes -= e.arr.nbytes
-        self.counters.cache_evictions += 1
+        self.counters.bump("cache_evictions")
 
     def _layer_recency(self) -> Dict[Tuple[str, int], int]:
         rec: Dict[Tuple[str, int], int] = {}
@@ -135,10 +135,10 @@ class HostCache:
         with self._lock:
             e = self._entries.get(key)
             if e is not None:
-                self.counters.cache_hits += 1
+                self.counters.bump("cache_hits")
                 self._touch(e)
                 return e.arr
-            self.counters.cache_misses += 1
+            self.counters.bump("cache_misses")
         arr = loader()
         with self._lock:
             e = self._entries.get(key)
@@ -149,7 +149,7 @@ class HostCache:
                 self._tick += 1
                 self._insert(key, _Entry(arr, self._tick))
             else:
-                self.counters.cache_bypass += 1
+                self.counters.bump("cache_bypass")
             self.counters.sample_memory(self._bytes)
             return arr
 
@@ -163,30 +163,64 @@ class HostCache:
         needed) without returning the data. With ``pin=True`` the entry's pin
         count is raised so it stays resident until the consuming gather calls
         :meth:`unpin`. Returns False when the entry could not be kept
-        resident (budget too tight) — the later ``get`` will reload."""
+        resident (budget too tight) — the later ``get`` will reload.
+        Single-key form of :meth:`prefetch_many`."""
+        return self.prefetch_many([key], lambda _ks: [loader()], pin=pin)[key]
+
+    def prefetch_many(
+        self,
+        keys,
+        batch_loader: Callable[[list], list],
+        pin: bool = False,
+    ) -> Dict[Key, bool]:
+        """Batched stage-1 prefetch: ensure every key is resident, loading
+        ALL the missing ones with a single ``batch_loader(missing_keys)``
+        call (the engine backs this with a vectored storage read — one
+        submission per work unit instead of one per partition). Pin
+        semantics match :meth:`prefetch`. Returns ``{key: resident}``;
+        a key is pinned iff it is resident and ``pin`` is set.
+
+        Trade-off: the whole missing working set is materialized at once
+        before insertion, so transient host memory can overshoot the budget
+        by up to one unit's missing blocks (blocks that don't fit are
+        dropped as bypass afterwards) — that is the price of paying the
+        storage per-op latency once per unit instead of once per block."""
+        out: Dict[Key, bool] = {}
+        missing = []
         with self._lock:
-            self.counters.cache_prefetches += 1
-            e = self._entries.get(key)
-            if e is not None:
-                self._touch(e)
-                if pin:
-                    e.pinned += 1
-                return True
-        arr = loader()
+            for key in keys:
+                self.counters.bump("cache_prefetches")
+                e = self._entries.get(key)
+                if e is not None:
+                    self._touch(e)
+                    if pin:
+                        e.pinned += 1
+                    out[key] = True
+                else:
+                    missing.append(key)
+        if not missing:
+            return out
+        arrs = batch_loader(missing)
         with self._lock:
-            e = self._entries.get(key)
-            if e is not None:
-                self._touch(e)
-                if pin:
-                    e.pinned += 1
-                return True
-            if self._make_room(arr.nbytes):
-                self._tick += 1
-                self._insert(key, _Entry(arr, self._tick, pinned=1 if pin else 0))
-                self.counters.sample_memory(self._bytes)
-                return True
-            self.counters.cache_bypass += 1
-            return False
+            for key, arr in zip(missing, arrs):
+                e = self._entries.get(key)
+                if e is not None:  # racing loader won; keep resident copy
+                    self._touch(e)
+                    if pin:
+                        e.pinned += 1
+                    out[key] = True
+                    continue
+                if self._make_room(arr.nbytes):
+                    self._tick += 1
+                    self._insert(
+                        key, _Entry(arr, self._tick, pinned=1 if pin else 0)
+                    )
+                    out[key] = True
+                else:
+                    self.counters.bump("cache_bypass")
+                    out[key] = False
+            self.counters.sample_memory(self._bytes)
+        return out
 
     def put(
         self,

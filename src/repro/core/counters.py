@@ -58,6 +58,13 @@ class Counters:
         with self._lock:
             self.phase_seconds[name] += seconds
 
+    def bump(self, field: str, amount: int = 1) -> None:
+        """Thread-safe increment of a scalar counter field. Pipeline gather
+        workers (possibly several) share this instance with the main loop,
+        and a bare ``+=`` on an attribute is not atomic."""
+        with self._lock:
+            setattr(self, field, getattr(self, field) + amount)
+
     def record_busy(self, stage: str, seconds: float) -> None:
         """Work executed on a pipeline worker thread (overlappable)."""
         with self._lock:
@@ -77,25 +84,56 @@ class Counters:
     def memory_timeline(self):
         return list(self._mem_timeline)
 
+    # stage-name → pass classification for the per-pass overlap split.
+    # Forward stages feed the forward loop; backward stages cover the loss
+    # logits fetch, regather/snapshot fetch, and the grad aux-fetch. Shared
+    # I/O stages (write_behind, async_read) count only toward the blended
+    # totals — their work serves both passes.
+    FWD_STAGES = ("prefetch", "gather")
+    BWD_STAGES = ("prefetch_bwd", "regather", "snap_prefetch", "snap_fetch",
+                  "grad_fetch", "loss_fetch")
+    BWD_WAITS = ("compute_wait_bwd", "compute_wait_loss")
+
     def overlap_summary(self, wall_seconds: float) -> Dict[str, float]:
         """Achieved overlap for a run of ``wall_seconds``.
 
         ``overlapped_seconds`` is worker busy time that did NOT translate
         into the main loop waiting (busy - compute_wait stall): the portion
         of prefetch/gather/write work genuinely hidden behind compute.
+        ``overlapped_frac_fwd`` / ``overlapped_frac_bwd`` report the same
+        quantity restricted to forward-pass vs backward-pass stages (the
+        engine records phase-specific stage and wait names), instead of one
+        blended number.
         """
         with self._lock:
-            busy = sum(self.stage_busy_seconds.values())
-            wait = self.stage_stall_seconds.get("compute_wait", 0.0)
-            stall_total = sum(self.stage_stall_seconds.values())
+            busy_map = dict(self.stage_busy_seconds)
+            stall_map = dict(self.stage_stall_seconds)
+        busy = sum(busy_map.values())
+        wait = sum(
+            v for k, v in stall_map.items() if k.startswith("compute_wait")
+        )
+        stall_total = sum(stall_map.values())
+
+        def _frac(ov: float) -> float:
+            return min(1.0, ov / wall_seconds) if wall_seconds > 0 else 0.0
+
         overlapped = max(0.0, busy - wait)
-        frac = min(1.0, overlapped / wall_seconds) if wall_seconds > 0 else 0.0
+        busy_f = sum(busy_map.get(s, 0.0) for s in self.FWD_STAGES)
+        ov_f = max(0.0, busy_f - stall_map.get("compute_wait_fwd", 0.0))
+        busy_b = sum(busy_map.get(s, 0.0) for s in self.BWD_STAGES)
+        ov_b = max(
+            0.0, busy_b - sum(stall_map.get(k, 0.0) for k in self.BWD_WAITS)
+        )
         return dict(
             busy_seconds=busy,
             compute_wait_seconds=wait,
             stall_seconds=stall_total,
             overlapped_seconds=overlapped,
-            overlapped_frac=frac,
+            overlapped_frac=_frac(overlapped),
+            overlapped_seconds_fwd=ov_f,
+            overlapped_frac_fwd=_frac(ov_f),
+            overlapped_seconds_bwd=ov_b,
+            overlapped_frac_bwd=_frac(ov_b),
         )
 
     def snapshot(self) -> Dict[str, float]:

@@ -16,10 +16,15 @@ gradient equality against whole-graph ``jax.grad`` is exact up to float
 reassociation — the paper's "no algorithm change" property (Appendix W).
 
 Execution is delegated to the async pipeline runtime (repro/runtime/): each
-layer pass streams its work units through prefetch → gather worker stages
-while the main thread computes in schedule order and bypass writes retire on
-a write-behind I/O thread. ``pipeline.depth == 0`` is the serial engine;
-``depth >= 1`` overlaps I/O with compute and is bit-identical to serial
+layer pass — forward, loss, and backward — streams its work units through
+prefetch → gather worker stages while the main thread computes in schedule
+order and bypass writes retire on a write-behind I/O thread. The backward's
+storage traffic is fully off the compute thread: loss logits reads and
+regather/snapshot fetches run on the gather workers, the ∇A^{l+1} fetch
+rides the pipeline's aux stage, and degraded-mode grad spills retire on the
+storage I/O queue (whose FIFO orders the later reads behind them).
+``pipeline.depth == 0`` is the serial engine; ``depth >= 1`` (with any
+``gather_workers``) overlaps I/O with compute and is bit-identical to serial
 (the compute order and every gathered buffer are unchanged).
 """
 from __future__ import annotations
@@ -51,6 +56,27 @@ def _grad_name(layer: int) -> str:
 
 def _snap_name(layer: int, p: int) -> str:
     return f"snap{layer}_{p}"
+
+
+def _scatter_add_rows(
+    buf: np.ndarray, rows: np.ndarray, values: np.ndarray
+) -> None:
+    """Scatter-add ``values`` into ``buf[rows]`` with a fast path for a
+    contiguous unique row run — a direct slice add there is an order of
+    magnitude faster than the general ``np.add.at`` and bit-identical (each
+    row is touched exactly once either way). The loss layer always scatters
+    ``arange(n_dst)`` and regather scatter runs are sorted-unique, so dense
+    partitions hit the fast path constantly."""
+    n = rows.size
+    if n == 0:
+        return
+    r0 = int(rows[0])
+    if int(rows[n - 1]) - r0 + 1 == n and (
+        n == 1 or bool(np.all(np.diff(rows) == 1))
+    ):
+        buf[r0 : r0 + n] += values
+    else:
+        np.add.at(buf, rows, values)
 
 
 class SSOEngine:
@@ -201,7 +227,10 @@ class SSOEngine:
         # (none in serial mode or when a prefetch couldn't keep residency)
         for key in self._prefetch_pins.pop((layer, u.p), ()):
             self.cache.unpin(key)
-        self.counters.host_gather_bytes += u.n_req * d * self.dtype.itemsize
+        # bump(): gathers may run on several pipeline workers concurrently
+        self.counters.bump(
+            "host_gather_bytes", u.n_req * d * self.dtype.itemsize
+        )
         return buf
 
     def _gather_padded(self, layer: int, u: WorkUnit, phase: str) -> np.ndarray:
@@ -209,18 +238,33 @@ class SSOEngine:
             return self._gather(layer, u, u.r_pad)
 
     def _prefetch_unit(self, layer: int, u: WorkUnit) -> None:
-        """Stage-1: make (and keep) the unit's source partitions resident."""
+        """Stage-1: make (and keep) the unit's source partitions resident.
+        With ``batched_reads`` every missing partition is fetched in ONE
+        vectored storage submission instead of one read per partition."""
         pin = self.pipeline.pin_prefetched
-        pinned = []
-        for q in u.req_parts:
-            key = ("act", layer, int(q))
-            resident = self.cache.prefetch(
-                key,
-                loader=partial(self._load_part_block, layer, int(q)),
-                pin=pin,
-            )
-            if pin and resident:
-                pinned.append(key)
+        keys = [("act", layer, int(q)) for q in u.req_parts]
+        if self.pipeline.batched_reads:
+            name = _act_name(layer)
+
+            def batch_loader(missing):
+                reqs = []
+                for (_, _, q) in missing:
+                    a0, a1 = self.plan.ro.partition_slice(q)
+                    reqs.append((name, a0, a1))
+                return self.storage.read_rows_batched(reqs)
+
+            res = self.cache.prefetch_many(keys, batch_loader, pin=pin)
+            pinned = [k for k in keys if res.get(k)] if pin else []
+        else:
+            pinned = []
+            for key in keys:
+                resident = self.cache.prefetch(
+                    key,
+                    loader=partial(self._load_part_block, layer, key[2]),
+                    pin=pin,
+                )
+                if pin and resident:
+                    pinned.append(key)
         if pinned:
             self._prefetch_pins[(layer, u.p)] = pinned
 
@@ -236,7 +280,9 @@ class SSOEngine:
                 (lambda u, _l=l: self._prefetch_unit(_l, u))
                 if self.pipeline.enabled else None
             )
-            for u, ga in rt.run_stream(units, gather_fn, prefetch_fn):
+            for u, ga, _ in rt.run_stream(
+                units, gather_fn, prefetch_fn, wait_stage="compute_wait_fwd"
+            ):
                 with PhaseTimer(self.counters, "compute_fwd"):
                     ga_dev = jnp.asarray(ga)
                     self.counters.h2d_bytes += ga.nbytes
@@ -271,22 +317,50 @@ class SSOEngine:
             ("snap", layer, p), snap, dirty=True, spill_name=name
         )
         if not ok:
-            self.storage.write_rows(name, 0, snap)
+            # write-behind when pipelined (snap is freshly owned); the
+            # forward's layer-boundary drain lands it before any reader
+            self._rt.write_rows(name, 0, snap)
             self._materialized_grads.add(("snapdisk", layer, p))
+
+    def _load_snap(self, layer: int, p: int, n_req: int) -> np.ndarray:
+        return self.storage.read_rows(_snap_name(layer, p), 0, n_req)
+
+    def _snapshot_prefetch(self, layer: int, u: WorkUnit) -> None:
+        """Stage-1 for snapshot-mode backward: warm the unit's snapshot (a
+        dirty eviction spilled it to its snap file) before the fetch stage
+        needs it, mirroring the regather prefetch."""
+        pin = self.pipeline.pin_prefetched
+        key = ("snap", layer, u.p)
+        resident = self.cache.prefetch(
+            key, loader=partial(self._load_snap, layer, u.p, u.n_req), pin=pin
+        )
+        if pin and resident:
+            self._prefetch_pins[(layer, u.p)] = [key]
 
     def _snapshot_get(self, layer: int, p: int, u: WorkUnit) -> np.ndarray:
         arr = self.cache.peek(("snap", layer, p))
         if arr is None:
             arr = self.storage.read_rows(_snap_name(layer, p), 0, u.n_req)
-            self.counters.cache_misses += 1
+            self.counters.bump("cache_misses")
         else:
-            self.counters.cache_hits += 1
+            self.counters.bump("cache_hits")
         buf = self._rt.pool.acquire((u.r_pad, arr.shape[1]), self.dtype)
         buf[: arr.shape[0]] = arr
         buf[arr.shape[0] :] = 0
+        for key in self._prefetch_pins.pop((layer, p), ()):
+            self.cache.unpin(key)
         return buf
 
     # ------------------------------------------------------- grad write-back
+    def _grad_read(self, name: str, a0: int, a1: int) -> np.ndarray:
+        """Grad-file read, routed through the storage I/O queue when
+        pipelined: the queue's FIFO orders it behind any in-flight
+        degraded-mode spill write of the same region."""
+        w = self._rt.writer
+        if w is not None:
+            return w.submit_read(name, a0, a1).result()
+        return self.storage.read_rows(name, a0, a1)
+
     def _grad_accumulate(
         self, layer: int, q: int, rows_local: np.ndarray, values: np.ndarray
     ) -> None:
@@ -300,7 +374,7 @@ class SSOEngine:
         buf = self.cache.acquire(key)
         if buf is None:
             if ("gradmat", layer, q) in self._materialized_grads:
-                buf = self.storage.read_rows(name, a0, a1)
+                buf = self._grad_read(name, a0, a1)
             else:
                 buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
                 self._materialized_grads.add(("gradmat", layer, q))
@@ -309,30 +383,39 @@ class SSOEngine:
                 spill_name=name, spill_row0=a0,
             )
             if not ok:
-                # degraded mode: direct read-modify-write on storage
-                np.add.at(buf, rows_local, values)
-                self.storage.write_rows(name, a0, buf)
+                # degraded mode: read-modify-write on storage. The write
+                # retires on the I/O queue (buf is freshly owned and never
+                # touched again); later fetches of this region go through
+                # the same FIFO, so they see it without blocking here.
+                _scatter_add_rows(buf, rows_local, values)
+                self._rt.write_rows(name, a0, buf)
                 self.counters.host_scatter_bytes += values.nbytes
                 return
-        np.add.at(buf, rows_local, values)
+        _scatter_add_rows(buf, rows_local, values)
         self.cache.release(key)
         self.counters.host_scatter_bytes += values.nbytes
 
     def _grad_fetch(self, layer: int, p: int) -> np.ndarray:
-        """Read ∇A^{layer} for destination partition p (padded to topo rows)."""
-        u = self.plan.unit(p)
-        key = ("grad", layer, p)
-        a0, a1 = u.v0, u.v1
-        buf = self.cache.peek(key)
-        if buf is None:
-            if ("gradmat", layer, p) in self._materialized_grads:
-                buf = self.storage.read_rows(_grad_name(layer), a0, a1)
+        """Read ∇A^{layer} for destination partition p (padded to topo rows).
+
+        Runs on the pipeline's aux-fetch stage when enabled, hiding the
+        grad-file read behind the previous unit's compute. The padded output
+        comes from the runtime pool — the caller releases it via
+        ``self._rt.pool.release`` once the device has consumed it."""
+        with PhaseTimer(self.counters, "grad_fetch"):
+            u = self.plan.unit(p)
+            key = ("grad", layer, p)
+            a0, a1 = u.v0, u.v1
+            buf = self.cache.peek(key)
+            if buf is None and ("gradmat", layer, p) in self._materialized_grads:
+                buf = self._grad_read(_grad_name(layer), a0, a1)
+            out = self._rt.pool.acquire((u.d_pad, self.dims[layer]), self.dtype)
+            if buf is None:       # never materialized: ∇A rows are zero
+                out[:] = 0
             else:
-                buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
-        d_pad = u.d_pad
-        out = np.zeros((d_pad, self.dims[layer]), self.dtype)
-        out[: u.n_dst] = buf
-        return out
+                out[: u.n_dst] = buf
+                out[u.n_dst :] = 0
+            return out
 
     # ------------------------------------------------------------- backward
     def backward(self, params: List, labels_reordered: np.ndarray):
@@ -350,17 +433,26 @@ class SSOEngine:
             st.alloc(name, (n, self.dims[l]), self.dtype)
         self._materialized_grads.clear()
 
-        # ---- loss layer: dL/dA^L per partition
+        # ---- loss layer: dL/dA^L per partition. Logits reads are pipelined
+        # through run_stream (busy charged to "loss_fetch"); the dlog
+        # write-back lands in the grad cache, spilling through the
+        # write-behind queue when degraded.
         total_loss = 0.0
-        for p in plan.schedule:
-            u = plan.unit(p)
+        units = [plan.unit(p) for p in plan.schedule]
+
+        def loss_fetch(u: WorkUnit) -> np.ndarray:
             logits = st.read_rows(_act_name(L), u.v0, u.v1)
-            lab = labels_reordered[u.v0 : u.v1].astype(np.int32)
-            d_pad = u.d_pad
-            lg = np.zeros((d_pad, self.dims[L]), self.dtype)
+            lg = rt.pool.acquire((u.d_pad, self.dims[L]), self.dtype)
             lg[: u.n_dst] = logits
-            lb = np.full((d_pad,), -1, np.int32)
-            lb[: u.n_dst] = lab
+            lg[u.n_dst :] = 0
+            return lg
+
+        for u, lg, _ in rt.run_stream(
+            units, loss_fetch,
+            gather_stage="loss_fetch", wait_stage="compute_wait_loss",
+        ):
+            lb = np.full((u.d_pad,), -1, np.int32)
+            lb[: u.n_dst] = labels_reordered[u.v0 : u.v1].astype(np.int32)
             self.counters.h2d_bytes += lg.nbytes
             loss_p, dlog = loss_fn(
                 jnp.asarray(lg), jnp.asarray(lb), jnp.float32(n)
@@ -368,9 +460,9 @@ class SSOEngine:
             total_loss += float(loss_p)
             dlog_np = np.asarray(dlog[: u.n_dst])
             self.counters.d2h_bytes += dlog_np.nbytes
-            self._grad_accumulate(
-                L, p, np.arange(u.n_dst), dlog_np
-            )
+            rt.pool.release(lg)
+            with PhaseTimer(self.counters, "scatter"):
+                self._grad_accumulate(L, u.p, np.arange(u.n_dst), dlog_np)
 
         # ---- layers L..1
         grads: List = [None] * L
@@ -386,11 +478,28 @@ class SSOEngine:
                     (lambda u, _l=l: self._prefetch_unit(_l, u))
                     if self.pipeline.enabled else None
                 )
+                gather_stage, prefetch_stage = "regather", "prefetch_bwd"
             else:
                 gather_fn = lambda u, _l=l: self._snapshot_get(_l, u.p, u)
-                prefetch_fn = None
-            for u, ga in rt.run_stream(units, gather_fn, prefetch_fn):
-                with PhaseTimer(self.counters, "grad_fetch"):
+                prefetch_fn = (
+                    (lambda u, _l=l: self._snapshot_prefetch(_l, u))
+                    if self.pipeline.enabled else None
+                )
+                gather_stage, prefetch_stage = "snap_fetch", "snap_prefetch"
+            # aux stage: fetch ∇A^{l+1} on the gather workers. Safe to run
+            # ahead — grad layer l+1 was fully accumulated before this
+            # stream started, and this stream only scatters into layer l.
+            aux_fn = (
+                (lambda u, _l=l: self._grad_fetch(_l + 1, u.p))
+                if (self.pipeline.enabled and self.pipeline.aux_fetch)
+                else None
+            )
+            for u, ga, d_out in rt.run_stream(
+                units, gather_fn, prefetch_fn, aux_fn=aux_fn,
+                prefetch_stage=prefetch_stage, gather_stage=gather_stage,
+                aux_stage="grad_fetch", wait_stage="compute_wait_bwd",
+            ):
+                if d_out is None:  # aux stage disabled: fetch inline
                     d_out = self._grad_fetch(l + 1, u.p)
                 with PhaseTimer(self.counters, "compute_bwd"):
                     self.counters.h2d_bytes += ga.nbytes + d_out.nbytes
@@ -405,6 +514,7 @@ class SSOEngine:
                     dga_np = np.asarray(dga[: u.n_req])
                     self.counters.d2h_bytes += dga_np.nbytes
                 rt.pool.release(ga)
+                rt.pool.release(d_out)
                 if l > 0:
                     # scatter ∇GA rows back to their source partitions
                     with PhaseTimer(self.counters, "scatter"):
@@ -416,12 +526,15 @@ class SSOEngine:
                                 l, int(q), rows, dga_np[ptr[q] : ptr[q + 1]]
                             )
             grads[l] = jax.tree.map(np.asarray, dW_acc)
-            # drop consumed grad layer l+1 from cache & storage
+            # drop consumed grad layer l+1 from cache & storage; barrier
+            # first so no queued degraded spill targets the freed file
             self.cache.drop_layer("grad", l + 1, flush=False)
+            rt.drain_writes()
             st.free(_grad_name(l + 1))
             if self.mode == "snapshot":
                 self.cache.drop_layer("snap", l, flush=False)
         self.cache.drop_layer("grad", 0, flush=False)
+        rt.drain_writes()
         st.free(_grad_name(0))
         return total_loss, grads
 

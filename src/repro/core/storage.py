@@ -108,6 +108,34 @@ class StorageTier:
             c.storage_read_ops += 1
         return out
 
+    def read_rows_batched(self, requests) -> list:
+        """Vectored read: service many ``(name, row0, row1)`` ranges in ONE
+        submission (io_uring-style), returning one array per range.
+
+        Counted as a single read op — the per-op latency is paid once for
+        the whole batch — while logical and page-rounded bytes accumulate
+        per range (the ranges are discontiguous, so each one is rounded to
+        page granularity separately). This is what the pipeline's prefetch
+        stage issues per work unit instead of one ``read_rows`` per source
+        partition.
+        """
+        outs = []
+        nb = paged = 0
+        for name, row0, row1 in requests:
+            mm = self._arrays[name]
+            out = np.array(mm[row0:row1])
+            outs.append(out)
+            nb += out.nbytes
+            paged += self._paged(out.nbytes)
+        if not outs:
+            return outs
+        c = self.counters
+        with self._lock:
+            c.storage_read_bytes += nb
+            c.storage_read_paged_bytes += paged
+            c.storage_read_ops += 1
+        return outs
+
     def read_rows_scattered(self, name: str, rows: np.ndarray) -> np.ndarray:
         """Vertex-granular random read (the *anti-pattern* the paper avoids).
 
@@ -188,7 +216,7 @@ class StorageIOQueue:
                 if self._exc is not None:
                     raise self._exc
             fut: cf.Future = cf.Future()
-            self._q.append(("w", name, row0, arr, None, fut))
+            self._q.append(("w", (name, row0, arr), fut))
             self._inflight_bytes += nb
             self._inflight_ops += 1
             self.max_inflight_observed = max(
@@ -201,12 +229,36 @@ class StorageIOQueue:
         return fut
 
     def submit_read(self, name: str, row0: int, row1: int) -> cf.Future:
-        """Queue a ranged read; the future resolves to the array."""
+        """Queue a ranged read; the future resolves to the array.
+
+        The single FIFO orders reads behind every previously submitted
+        write, so a read of a region queued after its write always sees
+        the written data — the engine relies on this for grad-file reads
+        behind degraded-mode spill writes."""
         with self._cond:
             if self._closed:
                 raise RuntimeError("StorageIOQueue is closed")
+            if self._exc is not None:
+                # fail fast: a prior (unawaited) write died — reading around
+                # it would silently return stale data
+                raise self._exc
             fut: cf.Future = cf.Future()
-            self._q.append(("r", name, row0, row1, None, fut))
+            self._q.append(("r", (name, row0, row1), fut))
+            self._inflight_ops += 1
+            self._cond.notify_all()
+        return fut
+
+    def submit_read_batch(self, requests) -> cf.Future:
+        """Queue one vectored read of many ``(name, row0, row1)`` ranges;
+        the future resolves to the list of arrays (one per range). Same
+        FIFO ordering guarantee as :meth:`submit_read`."""
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("StorageIOQueue is closed")
+            if self._exc is not None:
+                raise self._exc
+            fut: cf.Future = cf.Future()
+            self._q.append(("rb", list(requests), fut))
             self._inflight_ops += 1
             self._cond.notify_all()
         return fut
@@ -220,19 +272,21 @@ class StorageIOQueue:
                 item = self._q.popleft()
             if item is StorageIOQueue._CLOSE:
                 return
-            kind, name, a, b, _, fut = item
+            kind, payload, fut = item
             t0 = time.perf_counter()
             try:
                 if kind == "w":
-                    self.tier.write_rows(name, a, b)
+                    self.tier.write_rows(*payload)
                     res = None
+                elif kind == "rb":
+                    res = self.tier.read_rows_batched(payload)
                 else:
-                    res = self.tier.read_rows(name, a, b)
+                    res = self.tier.read_rows(*payload)
             except BaseException as e:  # surface on drain() and futures
                 with self._cond:
                     self._exc = e
                     if kind == "w":
-                        self._inflight_bytes -= int(b.nbytes)
+                        self._inflight_bytes -= int(payload[2].nbytes)
                     self._inflight_ops -= 1
                     self._cond.notify_all()
                 fut.set_exception(e)
@@ -243,7 +297,7 @@ class StorageIOQueue:
             )
             with self._cond:
                 if kind == "w":
-                    self._inflight_bytes -= int(b.nbytes)
+                    self._inflight_bytes -= int(payload[2].nbytes)
                 self._inflight_ops -= 1
                 self._cond.notify_all()
             fut.set_result(res)

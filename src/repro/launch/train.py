@@ -17,7 +17,7 @@ import argparse
 import sys
 
 
-def _offload_smoke(model: str, depth: int) -> dict:
+def _offload_smoke(model: str, depth: int, gather_workers: int = 1) -> dict:
     """Drive the SSO engine (serial + pipelined) for a GNN arch."""
     import tempfile
 
@@ -49,7 +49,8 @@ def _offload_smoke(model: str, depth: int) -> dict:
         st_ = StorageTier(tempfile.mkdtemp(), counters=c)
         cache = HostCache(4 << 20, st_, c)
         eng = SSOEngine(spec, plan, dims, st_, cache, c,
-                        pipeline=PipelineConfig(depth=d))
+                        pipeline=PipelineConfig(
+                            depth=d, gather_workers=gather_workers))
         eng.initialize(X)
         loss, grads = eng.run_epoch(params, Y)
         eng.close()
@@ -81,6 +82,8 @@ def main():
     ap.add_argument("--pipeline-depth", type=int, default=2,
                     help="async pipeline lookahead for --offload "
                          "(0 = serial engine)")
+    ap.add_argument("--gather-workers", type=int, default=1,
+                    help="parallel host-gather workers for --offload")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
 
@@ -105,7 +108,7 @@ def main():
         # GNN ArchSpecs don't carry the model id directly; recover it from
         # the config module naming convention (gcn-cora -> gcn, ...)
         model = args.arch.split("-")[0]
-        r = _offload_smoke(model, args.pipeline_depth)
+        r = _offload_smoke(model, args.pipeline_depth, args.gather_workers)
         print(f"{args.arch} offload smoke: {r}")
         ok = r.get("finite") and r.get("pipeline_matches_serial", True)
         sys.exit(0 if ok else 1)

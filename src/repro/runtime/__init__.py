@@ -6,9 +6,11 @@ write-behind, over bounded queues with stall/overlap accounting in
 """
 from repro.runtime.config import PipelineConfig
 from repro.runtime.executor import BufferPool, PipelineExecutor
-from repro.runtime.queues import DONE, PipelineAbort, StageQueue
+from repro.runtime.queues import (
+    DONE, PipelineAbort, ReassemblyBuffer, StageQueue,
+)
 
 __all__ = [
     "PipelineConfig", "PipelineExecutor", "BufferPool",
-    "StageQueue", "PipelineAbort", "DONE",
+    "StageQueue", "ReassemblyBuffer", "PipelineAbort", "DONE",
 ]

@@ -28,6 +28,20 @@ class PipelineConfig:
         Pin prefetched partitions in the host cache until their gather
         consumes them, so cache pressure can't evict an in-flight working
         set (pins are counted; over-budget prefetches degrade to bypass).
+    gather_workers
+        Number of parallel host-gather worker threads. Results are joined
+        through a sequence-numbered reassembly buffer, so the compute stage
+        still consumes units in strict schedule order (bit-identical math)
+        while multi-core boxes shard the gather/aux work.
+    aux_fetch
+        Run each backward unit's aux fetch (the ∇A^{l+1} read) on the
+        gather stage instead of the compute thread, so grad-file reads hide
+        behind the previous unit's compute.
+    batched_reads
+        Prefetch issues ONE vectored storage submission per work unit
+        (``StorageTier.read_rows_batched``) covering every missing source
+        partition, instead of one ``read_rows`` per partition — paying the
+        per-op latency once per unit.
     """
 
     depth: int = 0
@@ -35,6 +49,9 @@ class PipelineConfig:
     write_behind: bool = True
     max_inflight_write_bytes: int = 64 << 20
     pin_prefetched: bool = True
+    gather_workers: int = 1
+    aux_fetch: bool = True
+    batched_reads: bool = True
 
     @property
     def enabled(self) -> bool:

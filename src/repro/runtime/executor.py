@@ -15,6 +15,14 @@ to it (asserted by the equivalence tests). What the pipeline changes is only
 ``i+1..i+depth`` run while unit ``i`` computes, and bypass writes retire on
 the storage I/O queue behind the compute.
 
+The gather stage may be sharded across ``gather_workers`` threads; their
+out-of-order completions are rejoined by a sequence-numbered
+:class:`~repro.runtime.queues.ReassemblyBuffer` before the compute stage
+sees them. An optional per-unit aux-fetch (the backward's ∇A^{l+1} read)
+rides on the gather stage so the entire backward's storage traffic — loss
+logits reads, regather/snapshot fetches, grad fetches, and degraded-mode
+grad spills — is off the compute thread.
+
 Gather outputs are recycled through a :class:`BufferPool` — with ``depth=1``
 this is classic double buffering (one buffer on device feed, one being
 assembled), and queue capacity bounds live buffers at ``capacity + 1`` per
@@ -33,7 +41,9 @@ from repro.core.cache import HostCache
 from repro.core.counters import Counters
 from repro.core.storage import StorageIOQueue, StorageTier
 from repro.runtime.config import PipelineConfig
-from repro.runtime.queues import DONE, PipelineAbort, StageQueue
+from repro.runtime.queues import (
+    DONE, PipelineAbort, ReassemblyBuffer, StageQueue,
+)
 
 
 class BufferPool:
@@ -115,36 +125,53 @@ class PipelineExecutor:
         items: Iterable,
         gather_fn: Callable,
         prefetch_fn: Optional[Callable] = None,
+        aux_fn: Optional[Callable] = None,
+        prefetch_stage: str = "prefetch",
+        gather_stage: str = "gather",
+        aux_stage: str = "aux_fetch",
+        wait_stage: str = "compute_wait",
     ):
-        """Yield ``(item, gather_fn(item))`` in input order.
+        """Yield ``(item, gather_fn(item), aux_fn(item) or None)`` in input
+        order.
 
-        Serial (``depth=0``): gather runs inline on the caller thread.
+        Serial (``depth=0``): gather and aux run inline on the caller
+        thread, in that order — exactly the serial engine's sequence.
         Pipelined: a prefetch worker runs ``prefetch_fn`` up to ``depth``
-        units ahead (stage-1 storage reads, cache pinning) and a gather
-        worker assembles buffers (stage-2) into a bounded queue the caller
-        drains; caller wait time is charged to the ``compute_wait`` stall.
+        units ahead (stage-1 storage reads, cache pinning) and
+        ``cfg.gather_workers`` workers assemble buffers and run the aux
+        fetch (stage-2); out-of-order completions are joined by a
+        sequence-numbered :class:`ReassemblyBuffer` so the caller still
+        consumes strictly in input order. Caller wait time is charged to
+        the ``wait_stage`` stall; worker time to ``prefetch_stage`` /
+        ``gather_stage`` / ``aux_stage`` busy — phase-specific names let
+        :meth:`Counters.overlap_summary` split forward from backward
+        overlap.
         """
         items = list(items)
         if not self.cfg.enabled or len(items) <= 1:
             for it in items:
-                yield it, gather_fn(it)
+                buf = gather_fn(it)
+                aux = aux_fn(it) if aux_fn is not None else None
+                yield it, buf, aux
             return
 
         c = self.counters
+        nworkers = max(1, int(self.cfg.gather_workers))
         abort = threading.Event()
         q_ready = StageQueue("prefetch_out", self.cfg.capacity, c, abort)
-        q_out = StageQueue("gather_out", self.cfg.capacity, c, abort)
+        reasm = ReassemblyBuffer("gather_out", self.cfg.capacity, c, abort)
         errors: List[BaseException] = []
 
         def _prefetch_worker():
             try:
-                for it in items:
+                for seq, it in enumerate(items):
                     if prefetch_fn is not None:
                         t0 = time.perf_counter()
                         prefetch_fn(it)
-                        c.record_busy("prefetch", time.perf_counter() - t0)
-                    q_ready.put(it)
-                q_ready.put(DONE)
+                        c.record_busy(prefetch_stage, time.perf_counter() - t0)
+                    q_ready.put((seq, it))
+                for _ in range(nworkers):
+                    q_ready.put(DONE)
             except PipelineAbort:
                 pass
             except BaseException as e:
@@ -154,41 +181,49 @@ class PipelineExecutor:
         def _gather_worker():
             try:
                 while True:
-                    it = q_ready.get()
-                    if it is DONE:
-                        q_out.put(DONE)
+                    x = q_ready.get()
+                    if x is DONE:
                         return
+                    seq, it = x
                     t0 = time.perf_counter()
                     buf = gather_fn(it)
-                    c.record_busy("gather", time.perf_counter() - t0)
-                    q_out.put((it, buf))
+                    c.record_busy(gather_stage, time.perf_counter() - t0)
+                    aux = None
+                    if aux_fn is not None:
+                        t0 = time.perf_counter()
+                        aux = aux_fn(it)
+                        c.record_busy(aux_stage, time.perf_counter() - t0)
+                    reasm.put(seq, (it, buf, aux))
             except PipelineAbort:
                 pass
             except BaseException as e:
                 errors.append(e)
                 abort.set()
 
-        tp = threading.Thread(
-            target=_prefetch_worker, name="sso-prefetch", daemon=True
-        )
-        tg = threading.Thread(
-            target=_gather_worker, name="sso-gather", daemon=True
-        )
-        tp.start()
-        tg.start()
+        threads = [
+            threading.Thread(
+                target=_prefetch_worker, name="sso-prefetch", daemon=True
+            )
+        ]
+        threads += [
+            threading.Thread(
+                target=_gather_worker, name=f"sso-gather-{i}", daemon=True
+            )
+            for i in range(nworkers)
+        ]
+        for t in threads:
+            t.start()
         try:
-            while True:
+            for seq in range(len(items)):
                 try:
-                    x = q_out.get(stall_name="compute_wait")
+                    it, buf, aux = reasm.get(seq, stall_name=wait_stage)
                 except PipelineAbort:
                     break
-                if x is DONE:
-                    break
-                yield x
+                yield it, buf, aux
         finally:
             abort.set()
-            tp.join(timeout=5)
-            tg.join(timeout=5)
+            for t in threads:
+                t.join(timeout=5)
             if errors:
                 raise errors[0]
 

@@ -26,6 +26,67 @@ class PipelineAbort(Exception):
     """Raised inside a stage blocked on a queue when the pipeline aborts."""
 
 
+class ReassemblyBuffer:
+    """Sequence-numbered in-order join behind N parallel gather workers.
+
+    Workers complete units out of order; ``put(seq, value)`` parks a result
+    until the consumer's cursor reaches ``seq``, and blocks once ``capacity``
+    results are buffered ahead of the cursor — the backpressure that bounds
+    live gather buffers exactly like a bounded queue does for one worker.
+    ``get(seq)`` blocks until that sequence number arrives, so the consumer
+    always sees the strict schedule order regardless of worker count.
+
+    No deadlock is possible: the worker holding ``seq == cursor`` is never
+    blocked in ``put`` (its slot is always admissible), so the cursor always
+    advances while producers are alive.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        capacity: int,
+        counters: Counters,
+        abort: threading.Event,
+    ):
+        self.name = name
+        self.counters = counters
+        self.abort = abort
+        self._cap = max(1, int(capacity))
+        self._slots: dict = {}
+        self._next = 0
+        self._cond = threading.Condition()
+
+    def put(self, seq: int, value, stall_name: Optional[str] = None) -> None:
+        t0 = time.perf_counter()
+        with self._cond:
+            while seq - self._next >= self._cap:
+                if self.abort.is_set():
+                    raise PipelineAbort(self.name)
+                self._cond.wait(0.02)
+            if self.abort.is_set():
+                raise PipelineAbort(self.name)
+            self._slots[seq] = value
+            self._cond.notify_all()
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall(stall_name or f"{self.name}.put", stall)
+
+    def get(self, seq: int, stall_name: Optional[str] = None):
+        t0 = time.perf_counter()
+        with self._cond:
+            while seq not in self._slots:
+                if self.abort.is_set():
+                    raise PipelineAbort(self.name)
+                self._cond.wait(0.02)
+            value = self._slots.pop(seq)
+            self._next = seq + 1
+            self._cond.notify_all()
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall(stall_name or f"{self.name}.get", stall)
+        return value
+
+
 class StageQueue:
     def __init__(
         self,

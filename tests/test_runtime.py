@@ -35,7 +35,8 @@ def _setup(n_nodes=900, n_parts=5, d_in=16, seed=0):
     return plan, X[plan.ro.perm], Y[plan.ro.perm]
 
 
-def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1):
+def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1,
+         gather_workers=1):
     spec = get_gnn("gcn")
     params = spec.init(jax.random.PRNGKey(0), dims[0], dims[1], dims[-1],
                        len(dims) - 1)
@@ -44,7 +45,7 @@ def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1):
     cache = HostCache(budget_kb << 10, st_, c)
     eng = SSOEngine(
         spec, plan, dims, st_, cache, c, mode=mode,
-        pipeline=PipelineConfig(depth=depth),
+        pipeline=PipelineConfig(depth=depth, gather_workers=gather_workers),
     )
     eng.initialize(Xr)
     for _ in range(epochs):
@@ -75,6 +76,40 @@ def test_pipelined_matches_serial_exactly(mode, depth):
         # the pipeline stages really ran on workers
         assert c1.stage_busy_seconds.get("gather", 0.0) > 0.0
         assert c1.cache_prefetches > 0
+
+
+@pytest.mark.parametrize("mode", ["regather", "snapshot"])
+def test_multiworker_gather_matches_serial(mode):
+    """gather_workers > 1: units complete out of order on the workers, the
+    reassembly buffer re-serializes them — loss and grads stay bit-identical
+    to the serial engine in both backward modes."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, mode, depth=0)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=2, gather_workers=3)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+    # the backward aux stage really ran on workers
+    assert c1.stage_busy_seconds.get("grad_fetch", 0.0) > 0.0
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_degraded_grad_spill_bit_identical(depth):
+    """Satellite: cache.put of the grad write-back buffer fails (budget far
+    below one partition's buffer) -> direct read-modify-write on storage via
+    the I/O queue. Gradients must stay bit-identical to an uncapped-cache
+    run and host_scatter_bytes must still be counted."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    l0, g0, c0 = _run(plan, Xr, Yr, dims, "regather", depth=0,
+                      budget_kb=8192)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, "regather", depth=depth,
+                      budget_kb=4)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+    assert c1.cache_bypass > 0          # puts really degraded
+    assert c1.host_scatter_bytes > 0    # spill path still counts bytes
+    assert c1.host_scatter_bytes == c0.host_scatter_bytes
 
 
 def test_pipelined_matches_serial_under_thrash():
@@ -145,6 +180,25 @@ def test_overlap_accounting():
     assert any(k.startswith("busy_") for k in snap)
 
 
+def test_fwd_bwd_overlap_split():
+    """The per-stage table separates forward from backward: loss logits
+    fetch, regather, and the grad aux fetch all record worker busy time
+    under their own names, and overlap_summary reports per-pass fractions
+    instead of one blended number."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    t0 = time.perf_counter()
+    _, _, c = _run(plan, Xr, Yr, dims, "regather", depth=2)
+    wall = time.perf_counter() - t0
+    for stage in ("gather", "loss_fetch", "regather", "grad_fetch"):
+        assert c.stage_busy_seconds.get(stage, 0.0) > 0.0, stage
+    s = c.overlap_summary(wall)
+    assert 0.0 <= s["overlapped_frac_fwd"] <= 1.0
+    assert 0.0 <= s["overlapped_frac_bwd"] <= 1.0
+    assert s["overlapped_seconds_fwd"] <= s["busy_seconds"]
+    assert s["overlapped_seconds_bwd"] <= s["busy_seconds"]
+
+
 # ------------------------------------------------------------- StorageIOQueue
 def test_write_behind_flushes_on_close(rng):
     c = Counters()
@@ -194,6 +248,48 @@ def test_async_read_roundtrip(rng):
     st_.close()
 
 
+# ------------------------------------------------------------ vectored reads
+def test_read_rows_batched_counts_one_op(rng):
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (64, 8), np.float32)
+    st_.alloc("b", (64, 8), np.float32)
+    xa = rng.standard_normal((64, 8)).astype(np.float32)
+    xb = rng.standard_normal((64, 8)).astype(np.float32)
+    st_.write_rows("a", 0, xa)
+    st_.write_rows("b", 0, xb)
+    ops0, bytes0 = c.storage_read_ops, c.storage_read_bytes
+    outs = st_.read_rows_batched([("a", 0, 8), ("a", 32, 40), ("b", 4, 12)])
+    np.testing.assert_array_equal(outs[0], xa[0:8])
+    np.testing.assert_array_equal(outs[1], xa[32:40])
+    np.testing.assert_array_equal(outs[2], xb[4:12])
+    assert c.storage_read_ops - ops0 == 1         # ONE vectored submission
+    assert c.storage_read_bytes - bytes0 == 3 * 8 * 8 * 4
+    # each discontiguous range rounds to page granularity separately
+    assert c.storage_read_paged_bytes >= 3 * st_.page
+    assert st_.read_rows_batched([]) == []        # empty batch: no ops
+    assert c.storage_read_ops - ops0 == 1
+    st_.close()
+
+
+def test_submit_read_batch_fifo_after_write(rng):
+    """A batched read queued after a write must see the written data — the
+    FIFO ordering the engine's degraded-mode grad spills rely on."""
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (32, 4), np.float32)
+    x = rng.standard_normal((32, 4)).astype(np.float32)
+    q = StorageIOQueue(st_, counters=c)
+    q.submit_write("a", 0, x)
+    outs = q.submit_read_batch([("a", 0, 8), ("a", 16, 24)]).result(timeout=5)
+    np.testing.assert_array_equal(outs[0], x[0:8])
+    np.testing.assert_array_equal(outs[1], x[16:24])
+    q.close()
+    with pytest.raises(RuntimeError):
+        q.submit_read_batch([("a", 0, 8)])
+    st_.close()
+
+
 # ------------------------------------------------------ cache pin / prefetch
 def _mk_cache(budget):
     c = Counters()
@@ -230,6 +326,46 @@ def test_pin_counts_compose(rng):
     cache.unpin(("act", 0, 0))             # floor at zero
     assert cache._entries[("act", 0, 0)].pinned == 0
     assert not cache.pin(("missing", 0, 0))
+    st_.close()
+
+
+def test_prefetch_many_batches_and_pins():
+    cache, st_, c = _mk_cache(1 << 20)
+    calls = []
+
+    def batch_loader(missing):
+        calls.append(list(missing))
+        return [np.full((4, 4), k[2], np.float32) for k in missing]
+
+    keys = [("act", 0, q) for q in range(4)]
+    res = cache.prefetch_many(keys, batch_loader, pin=True)
+    assert all(res[k] for k in keys)
+    assert len(calls) == 1 and calls[0] == keys   # ONE batched load
+    assert c.cache_prefetches == 4
+    for k in keys:
+        assert cache._entries[k].pinned == 1
+        np.testing.assert_array_equal(
+            cache.peek(k), np.full((4, 4), k[2], np.float32)
+        )
+    # all resident now: no second load, pin=False leaves counts alone
+    res2 = cache.prefetch_many(keys, batch_loader, pin=False)
+    assert all(res2[k] for k in keys) and len(calls) == 1
+    assert all(cache._entries[k].pinned == 1 for k in keys)
+    st_.close()
+
+
+def test_prefetch_many_over_budget_bypasses():
+    entry_bytes = 4 * 4 * 4
+    cache, st_, c = _mk_cache(entry_bytes)  # room for exactly one entry
+
+    def batch_loader(missing):
+        return [np.full((4, 4), k[2], np.float32) for k in missing]
+
+    keys = [("act", 0, q) for q in range(3)]
+    res = cache.prefetch_many(keys, batch_loader, pin=True)
+    # a pinned resident entry can't be evicted, so only one fits
+    assert sum(bool(v) for v in res.values()) == 1
+    assert c.cache_bypass == 2
     st_.close()
 
 
@@ -302,13 +438,71 @@ def test_buffer_pool_recycles():
     assert pool.allocations == 2
 
 
-# ----------------------------------------------------------- error handling
-def test_pipeline_stage_error_propagates():
+# ------------------------------------------------------- run_stream harness
+def test_run_stream_multiworker_order_and_aux():
+    """4 gather workers with skewed per-item latency: the reassembly buffer
+    must re-serialize completions into input order, and the aux stage's
+    result must ride along with its own item."""
     from repro.runtime import PipelineExecutor
 
     c = Counters()
     st_ = StorageTier(tempfile.mkdtemp(), counters=c)
-    rt = PipelineExecutor(PipelineConfig(depth=2), c, st_)
+    rt = PipelineExecutor(
+        PipelineConfig(depth=3, gather_workers=4), c, st_
+    )
+    items = list(range(24))
+
+    def gather_fn(i):
+        time.sleep((i % 3) * 0.002)  # later items often finish first
+        return i * 10
+
+    out = list(rt.run_stream(
+        items, gather_fn, aux_fn=lambda i: i + 100,
+        gather_stage="g", aux_stage="a",
+    ))
+    assert [it for it, _, _ in out] == items
+    assert [buf for _, buf, _ in out] == [i * 10 for i in items]
+    assert [aux for _, _, aux in out] == [i + 100 for i in items]
+    assert c.stage_busy_seconds.get("g", 0.0) > 0.0
+    assert c.stage_busy_seconds.get("a", 0.0) > 0.0
+    rt.close()
+    st_.close()
+
+
+def test_run_stream_serial_runs_aux_inline():
+    from repro.runtime import PipelineExecutor
+
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    rt = PipelineExecutor(PipelineConfig(depth=0), c, st_)
+    order = []
+
+    def gather_fn(i):
+        order.append(("g", i))
+        return i
+
+    def aux_fn(i):
+        order.append(("a", i))
+        return -i
+
+    out = list(rt.run_stream([1, 2], gather_fn, aux_fn=aux_fn))
+    assert out == [(1, 1, -1), (2, 2, -2)]
+    # serial order is gather-then-aux per unit, same as the old inline path
+    assert order == [("g", 1), ("a", 1), ("g", 2), ("a", 2)]
+    rt.close()
+    st_.close()
+
+
+# ----------------------------------------------------------- error handling
+@pytest.mark.parametrize("workers", [1, 3])
+def test_pipeline_stage_error_propagates(workers):
+    from repro.runtime import PipelineExecutor
+
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    rt = PipelineExecutor(
+        PipelineConfig(depth=2, gather_workers=workers), c, st_
+    )
 
     def bad_gather(it):
         raise ValueError(f"boom {it}")
