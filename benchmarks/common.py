@@ -89,13 +89,15 @@ def run_engine_epoch(
     overlap: bool = False, pipeline_depth: int = 0,
     storage_latency_us: float = 0.0, storage_gbps: float = 0.0,
     per_epoch_walls: bool = False, gather_workers: int = 1,
+    transfer_stage: bool = True, device_slots: int = 2,
 ):
     """Returns (wall_s_per_epoch, modeled_s_per_epoch, counters).
 
     ``pipeline_depth`` > 0 runs the async runtime (repro/runtime/);
     ``overlap`` is the legacy knob for depth=1. Nonzero
     ``storage_latency_us``/``storage_gbps`` emulate an NVMe tier.
-    ``gather_workers`` shards the pipelined host gather."""
+    ``gather_workers`` shards the pipelined host gather;
+    ``transfer_stage``/``device_slots`` control the async H2D/D2H stage."""
     from repro.runtime import PipelineConfig
 
     c = Counters()
@@ -110,7 +112,10 @@ def run_engine_epoch(
     depth = pipeline_depth if pipeline_depth > 0 else (1 if overlap else 0)
     eng = SSOEngine(
         wl["spec"], wl["plan"], wl["dims"], st_, cache, c, mode=mode,
-        pipeline=PipelineConfig(depth=depth, gather_workers=gather_workers),
+        pipeline=PipelineConfig(
+            depth=depth, gather_workers=gather_workers,
+            transfer_stage=transfer_stage, device_slots=device_slots,
+        ),
     )
     eng.initialize(wl["X"])
     # warmup epoch compiles the jitted layer fns

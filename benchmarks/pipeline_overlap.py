@@ -22,7 +22,8 @@ import sys
 import time
 
 
-def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers):
+def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers,
+             transfer=True, device_slots=2):
     from benchmarks.common import run_engine_epoch
 
     out = {}
@@ -31,6 +32,7 @@ def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers):
             wl, mode, cache_mb << 20, epochs=epochs, pipeline_depth=d,
             storage_latency_us=latency_us, storage_gbps=gbps,
             per_epoch_walls=True, gather_workers=workers,
+            transfer_stage=transfer, device_slots=device_slots,
         )
         # min-of-epochs: robust to noisy-neighbour CPU spikes on shared boxes
         out[d] = dict(
@@ -49,6 +51,11 @@ def main() -> int:
     ap.add_argument("--depth", type=int, default=2)
     ap.add_argument("--gather-workers", type=int, default=1,
                     help="parallel host-gather workers in the pipelined run")
+    ap.add_argument("--device-slots", type=int, default=2,
+                    help="device-side staging slots for the transfer stage "
+                         "(2 = double buffer, 1 = serialized H2D)")
+    ap.add_argument("--no-transfer", action="store_true",
+                    help="disable the async H2D/D2H device-transfer stage")
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--cache-mb", type=int, default=8)
     ap.add_argument("--mode", default="regather",
@@ -83,7 +90,8 @@ def main() -> int:
     )
     res = run_pair(wl, args.depth, args.epochs, args.cache_mb, args.mode,
                    args.storage_latency_us, args.storage_gbps,
-                   args.gather_workers)
+                   args.gather_workers, transfer=not args.no_transfer,
+                   device_slots=args.device_slots)
     ser, pipe = res[0], res[args.depth]
 
     # the pipeline must not change the math
@@ -102,11 +110,14 @@ def main() -> int:
     print(
         f"pipelined,{pipe['wall'] * 1e3:.1f},"
         f"depth={args.depth} workers={args.gather_workers} "
+        f"slots={args.device_slots} "
+        f"xfer={'off' if args.no_transfer else 'on'} "
         f"mean={pipe['mean_wall'] * 1e3:.1f}ms "
         f"speedup={speedup:.2f}x "
         f"overlapped_frac={ov['overlapped_frac']:.3f} "
         f"fwd={ov['overlapped_frac_fwd']:.3f} "
         f"bwd={ov['overlapped_frac_bwd']:.3f} "
+        f"xfer_frac={ov['overlapped_frac_xfer']:.3f} "
         f"busy_s={ov['busy_seconds']:.3f} "
         f"compute_wait_s={ov['compute_wait_seconds']:.3f} "
         f"read_ops={pipe_ops}"
@@ -131,6 +142,8 @@ def main() -> int:
                 cache_mb=args.cache_mb, mode=args.mode,
                 storage_latency_us=args.storage_latency_us,
                 storage_gbps=args.storage_gbps,
+                transfer_stage=not args.no_transfer,
+                device_slots=args.device_slots,
             ),
             serial=dict(
                 wall_s=ser["wall"], mean_wall_s=ser["mean_wall"],
@@ -162,6 +175,8 @@ def main() -> int:
     # tests/test_runtime.py instead
     if ov["overlapped_frac_bwd"] <= 0.0:
         print("WARN,0,no backward overlap achieved", file=sys.stderr)
+    if not args.no_transfer and ov["overlapped_frac_xfer"] <= 0.0:
+        print("WARN,0,no H2D/D2H transfer overlap achieved", file=sys.stderr)
     if pipe_ops >= ser_ops:
         print(f"WARN,{pipe_ops},batched prefetch did not cut read ops "
               f"(serial={ser_ops})", file=sys.stderr)
@@ -169,6 +184,12 @@ def main() -> int:
         print("FAIL,0,pipeline workers recorded no busy time",
               file=sys.stderr)
         ok = False
+    if args.smoke and not args.no_transfer:
+        busy = pipe["counters"].stage_busy_seconds
+        if busy.get("h2d", 0.0) <= 0.0 or busy.get("d2h", 0.0) <= 0.0:
+            print("FAIL,0,transfer stage recorded no H2D/D2H busy time",
+                  file=sys.stderr)
+            ok = False
     return 0 if ok else 1
 
 

@@ -43,6 +43,11 @@ def main():
     ap.add_argument("--gather-workers", type=int, default=1,
                     help="parallel host-gather workers (joined in schedule "
                          "order; useful on multi-core boxes)")
+    ap.add_argument("--device-slots", type=int, default=2,
+                    help="device-side staging slots for the async H2D "
+                         "transfer stage (2 = double buffer)")
+    ap.add_argument("--no-transfer-stage", action="store_true",
+                    help="disable the async H2D/D2H device-transfer stage")
     ap.add_argument("--ckpt", default="/tmp/grinnder_ckpt")
     args = ap.parse_args()
 
@@ -71,7 +76,9 @@ def main():
                        mode="regather",
                        pipeline=PipelineConfig(
                            depth=args.pipeline_depth,
-                           gather_workers=args.gather_workers))
+                           gather_workers=args.gather_workers,
+                           transfer_stage=not args.no_transfer_stage,
+                           device_slots=args.device_slots))
     engine.initialize(X)
 
     start = 0

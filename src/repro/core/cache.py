@@ -20,6 +20,17 @@ several in-flight pipeline stages at once), loaders run outside the lock so
 storage reads overlap main-loop cache traffic, and ``acquire``/``release``
 give the scatter path an atomic peek-and-pin so a concurrent eviction can
 never drop an update into a flushed-and-forgotten buffer.
+
+Dirty-eviction flushes route through the write-behind ``StorageIOQueue``
+when one is wired in (:meth:`HostCache.set_spill_queue` — the engine wires
+its pipeline writer): the flush becomes a queue submit instead of a
+synchronous ``write_rows`` under the cache lock, so an eviction no longer
+stalls every pipeline worker for the duration of a storage write. Readers
+of spillable files must then go through the same queue (its FIFO orders a
+read behind the spill write of the same region) — the engine routes grad
+and snapshot reads that way. Without a queue the flush stays synchronous
+under the lock, which the serial engine's single-threaded ordering relies
+on.
 """
 from __future__ import annotations
 
@@ -61,18 +72,39 @@ class HostCache:
         self._bytes = 0
         self._tick = 0
         self._lock = threading.RLock()
+        self._spill_queue = None   # Optional[StorageIOQueue]
+
+    def set_spill_queue(self, queue) -> None:
+        """Route dirty-eviction flushes through an async ``StorageIOQueue``
+        (pass ``None`` to restore synchronous flushes). The caller owns the
+        queue's lifetime and must drain it before freeing/reading spill
+        targets outside the queue's FIFO."""
+        self._spill_queue = queue
 
     # -- internals ----------------------------------------------------------
     def _touch(self, e: _Entry) -> None:
         self._tick += 1
         e.tick = self._tick
 
+    def _spill(self, name: str, row0: int, arr: np.ndarray) -> None:
+        """Flush a dirty buffer: a non-blocking queue submit when a spill
+        queue is wired (eviction under the lock stalls on neither the write
+        nor the queue's byte backpressure — this runs while the cache RLock
+        is held), a synchronous write otherwise."""
+        q = self._spill_queue
+        if q is not None:
+            q.submit_write(name, row0, arr, wait=False)
+        else:
+            self.storage.write_rows(name, row0, arr)
+
     def _evict_entry(self, key: Key) -> None:
+        # accounting first: if the spill raises (failed queue, closed tier)
+        # the entry is gone either way and _bytes must not stay inflated
         e = self._entries.pop(key)
-        if e.dirty and e.spill_name is not None:
-            self.storage.write_rows(e.spill_name, e.spill_row0, e.arr)
         self._bytes -= e.arr.nbytes
         self.counters.bump("cache_evictions")
+        if e.dirty and e.spill_name is not None:
+            self._spill(e.spill_name, e.spill_row0, e.arr)
 
     def _layer_recency(self) -> Dict[Tuple[str, int], int]:
         rec: Dict[Tuple[str, int], int] = {}
@@ -241,9 +273,7 @@ class HostCache:
             if old is not None:
                 if old.dirty and old.spill_name is not None \
                         and old.arr is not arr:
-                    self.storage.write_rows(
-                        old.spill_name, old.spill_row0, old.arr
-                    )
+                    self._spill(old.spill_name, old.spill_row0, old.arr)
                 self._evict_silent(key)
             if not self._make_room(arr.nbytes):
                 return False

@@ -43,6 +43,9 @@ class Counters:
     cache_bypass: int = 0
     cache_prefetches: int = 0
     cache_peak_bytes: int = 0
+    # runtime buffer pool hygiene (repro/runtime/ BufferPool)
+    pool_trims: int = 0            # free-list buckets dropped at the byte cap
+    pool_release_rejects: int = 0  # release() calls refused by the guards
     # device compute (flop estimate filled by engine when available)
     device_flops: int = 0
 
@@ -88,11 +91,24 @@ class Counters:
     # Forward stages feed the forward loop; backward stages cover the loss
     # logits fetch, regather/snapshot fetch, and the grad aux-fetch. Shared
     # I/O stages (write_behind, async_read) count only toward the blended
-    # totals — their work serves both passes.
+    # totals — their work serves both passes. The device-transfer stage
+    # records H2D staging busy under "h2d" (transfer thread) and D2H retire
+    # busy under "d2h" (retire thread); the compute loop's wait on a staged
+    # unit is charged to "compute_wait_xfer_<pass>" and the transfer
+    # thread's own wait on the upstream gather to "xfer_wait_up_<pass>".
     FWD_STAGES = ("prefetch", "gather")
     BWD_STAGES = ("prefetch_bwd", "regather", "snap_prefetch", "snap_fetch",
                   "grad_fetch", "loss_fetch")
-    BWD_WAITS = ("compute_wait_bwd", "compute_wait_loss")
+    # per-pass waits attributable to the storage stages. With the transfer
+    # stage on, the compute loop's wait (compute_wait_xfer_*) measures the
+    # end of the whole chain INCLUDING the H2D copy itself, so the
+    # storage-stage share is the transfer thread's upstream-gather wait
+    # (xfer_wait_up_*) — subtracting the chain-end wait would charge H2D
+    # time against gather busy and understate per-pass overlap.
+    FWD_WAITS = ("compute_wait_fwd", "xfer_wait_up_fwd")
+    BWD_WAITS = ("compute_wait_bwd", "compute_wait_loss",
+                 "xfer_wait_up_bwd", "xfer_wait_up_loss")
+    XFER_STAGES = ("h2d", "d2h")
 
     def overlap_summary(self, wall_seconds: float) -> Dict[str, float]:
         """Achieved overlap for a run of ``wall_seconds``.
@@ -104,6 +120,14 @@ class Counters:
         quantity restricted to forward-pass vs backward-pass stages (the
         engine records phase-specific stage and wait names), instead of one
         blended number.
+
+        ``overlapped_frac_xfer`` is the device-transfer (H2D staging + D2H
+        retire) busy time hidden behind compute. The compute loop's
+        ``compute_wait_xfer_*`` stall measures the end of the whole
+        prefetch→gather→transfer chain, so the portion the transfer thread
+        itself spent waiting on the upstream gather (``xfer_wait_up_*``) is
+        first subtracted — only the remainder is wait attributable to the
+        transfer stage.
         """
         with self._lock:
             busy_map = dict(self.stage_busy_seconds)
@@ -119,11 +143,22 @@ class Counters:
 
         overlapped = max(0.0, busy - wait)
         busy_f = sum(busy_map.get(s, 0.0) for s in self.FWD_STAGES)
-        ov_f = max(0.0, busy_f - stall_map.get("compute_wait_fwd", 0.0))
+        ov_f = max(
+            0.0, busy_f - sum(stall_map.get(k, 0.0) for k in self.FWD_WAITS)
+        )
         busy_b = sum(busy_map.get(s, 0.0) for s in self.BWD_STAGES)
         ov_b = max(
             0.0, busy_b - sum(stall_map.get(k, 0.0) for k in self.BWD_WAITS)
         )
+        busy_x = sum(busy_map.get(s, 0.0) for s in self.XFER_STAGES)
+        wait_x = sum(
+            v for k, v in stall_map.items()
+            if k.startswith("compute_wait_xfer")
+        )
+        up_x = sum(
+            v for k, v in stall_map.items() if k.startswith("xfer_wait_up")
+        )
+        ov_x = max(0.0, busy_x - max(0.0, wait_x - up_x))
         return dict(
             busy_seconds=busy,
             compute_wait_seconds=wait,
@@ -134,6 +169,8 @@ class Counters:
             overlapped_frac_fwd=_frac(ov_f),
             overlapped_seconds_bwd=ov_b,
             overlapped_frac_bwd=_frac(ov_b),
+            overlapped_seconds_xfer=ov_x,
+            overlapped_frac_xfer=_frac(ov_x),
         )
 
     def snapshot(self) -> Dict[str, float]:

@@ -17,15 +17,22 @@ reassociation — the paper's "no algorithm change" property (Appendix W).
 
 Execution is delegated to the async pipeline runtime (repro/runtime/): each
 layer pass — forward, loss, and backward — streams its work units through
-prefetch → gather worker stages while the main thread computes in schedule
-order and bypass writes retire on a write-behind I/O thread. The backward's
-storage traffic is fully off the compute thread: loss logits reads and
-regather/snapshot fetches run on the gather workers, the ∇A^{l+1} fetch
-rides the pipeline's aux stage, and degraded-mode grad spills retire on the
-storage I/O queue (whose FIFO orders the later reads behind them).
+prefetch → gather → device-transfer worker stages while the main thread
+computes in schedule order and bypass writes retire on a write-behind I/O
+thread. The backward's storage traffic is fully off the compute thread:
+loss logits reads and regather/snapshot fetches run on the gather workers,
+the ∇A^{l+1} fetch rides the pipeline's aux stage, and degraded-mode grad
+spills (plus dirty cache evictions) retire on the storage I/O queue (whose
+FIFO orders the later reads behind them). Device transfers are off the
+compute thread too: the transfer stage ``jax.device_put``s the next unit's
+gathered buffer / labels / aux grad while the current unit's kernel runs
+(``PipelineConfig.device_slots`` bounds the staged units), and forward
+bypass results retire via ``copy_to_host_async`` + a deferred
+``np.asarray`` on the runtime's D2H retire thread.
 ``pipeline.depth == 0`` is the serial engine; ``depth >= 1`` (with any
-``gather_workers``) overlaps I/O with compute and is bit-identical to serial
-(the compute order and every gathered buffer are unchanged).
+``gather_workers``, with or without the transfer stage) overlaps I/O with
+compute and is bit-identical to serial (the compute order and every
+gathered buffer are unchanged; device copies are exact).
 """
 from __future__ import annotations
 
@@ -121,6 +128,15 @@ class SSOEngine:
         self.pipeline = pipeline
         self.overlap = pipeline.enabled
         self._rt = PipelineExecutor(pipeline, self.counters, storage, cache)
+        # device-transfer stage: all three passes consume pre-staged device
+        # arrays (H2D on the runtime's transfer thread) instead of paying
+        # jnp.asarray on the compute thread
+        self._use_xfer = pipeline.enabled and pipeline.transfer_stage
+        if self._rt.writer is not None:
+            # dirty cache evictions flush through the write-behind queue so
+            # an eviction never stalls pipeline workers on a storage write;
+            # grad/snap reads below go through the same FIFO for ordering
+            cache.set_spill_queue(self._rt.writer)
         self._jit_fwd = {}
         self._jit_bwd = {}
         self._jit_loss = None
@@ -268,10 +284,37 @@ class SSOEngine:
         if pinned:
             self._prefetch_pins[(layer, u.p)] = pinned
 
+    # ----------------------------------------------------- transfer staging
+    @staticmethod
+    def _h2d(arr: np.ndarray):
+        """Stage a host array onto the device with a GUARANTEED copy.
+        ``jax.device_put`` zero-copies 64-byte-aligned host buffers on the
+        CPU backend, which would let a staged device array alias a recycled
+        pool buffer; ``jnp.array(copy=True)`` always materializes an
+        independent device buffer (and on an accelerator is the same H2D
+        DMA either way). Blocks until the copy lands so the caller may
+        recycle ``arr`` immediately."""
+        dev = jnp.array(arr, copy=True)
+        dev.block_until_ready()
+        return dev
+
+    def _fwd_transfer(self, u: WorkUnit, ga: np.ndarray, _aux):
+        """H2D staging for one forward unit (runs on the transfer thread):
+        copy the gathered buffer onto the device while the previous unit's
+        kernel runs, then recycle the host buffer — snapshot mode keeps it
+        alive for the snapshot put on the compute loop."""
+        dev = self._h2d(ga)
+        self.counters.bump("h2d_bytes", ga.nbytes)
+        if self.mode == "snapshot":
+            return (dev, ga), None
+        self._rt.pool.release(ga)
+        return (dev, None), None
+
     # -------------------------------------------------------------- forward
     def forward(self, params: List) -> None:
         sched = self.plan.schedule
         rt = self._rt
+        use_xfer = self._use_xfer
         for l in range(self.n_layers):
             fwd = self._fwd(activate=(l < self.n_layers - 1))
             units = [self.plan.unit(p) for p in sched]
@@ -281,28 +324,53 @@ class SSOEngine:
                 if self.pipeline.enabled else None
             )
             for u, ga, _ in rt.run_stream(
-                units, gather_fn, prefetch_fn, wait_stage="compute_wait_fwd"
+                units, gather_fn, prefetch_fn,
+                transfer_fn=self._fwd_transfer if use_xfer else None,
+                wait_stage="compute_wait_fwd",
+                xfer_wait_stage="compute_wait_xfer_fwd",
+                xfer_up_stage="xfer_wait_up_fwd",
             ):
                 with PhaseTimer(self.counters, "compute_fwd"):
-                    ga_dev = jnp.asarray(ga)
-                    self.counters.h2d_bytes += ga.nbytes
+                    if use_xfer:
+                        ga_dev, ga_host = ga
+                    else:
+                        ga_host = ga
+                        ga_dev = jnp.asarray(ga)
+                        self.counters.bump("h2d_bytes", ga.nbytes)
                     out = fwd(params[l], ga_dev, u.topo)
-                    out_np = np.asarray(out[: u.n_dst])
-                    self.counters.d2h_bytes += out_np.nbytes
+                    out_dst = out[: u.n_dst]
+                    if use_xfer and self.pipeline.async_d2h:
+                        # start the D2H copy now; the retire thread runs the
+                        # deferred np.asarray + bypass write
+                        out_dst.copy_to_host_async()
+                        out_np = None
+                    else:
+                        out_np = np.asarray(out_dst)
+                        self.counters.bump("d2h_bytes", out_np.nbytes)
                 if self.mode == "snapshot":
                     # HongTu: persist GA for the backward pass (α-amplified).
                     # The snapshot is offloaded from the device, so it transits
                     # the device<->host link (paper Table 6: (2α+1)D forward).
-                    self.counters.d2h_bytes += (
-                        u.n_req * ga.shape[1] * self.dtype.itemsize
+                    self.counters.bump(
+                        "d2h_bytes",
+                        u.n_req * self.dims[l] * self.dtype.itemsize,
                     )
-                    self._snapshot_put(l, u.p, ga[: u.n_req])
-                rt.pool.release(ga)
+                    self._snapshot_put(l, u.p, ga_host[: u.n_req])
+                if ga_host is not None and (
+                    not use_xfer or self.mode == "snapshot"
+                ):
+                    # regather+transfer recycled the host buffer on the
+                    # transfer thread already
+                    rt.pool.release(ga_host)
                 with PhaseTimer(self.counters, "bypass_write"):
                     # bypass: output activations go straight to storage
                     # (write-behind when pipelined; out_np is freshly owned)
-                    rt.write_rows(_act_name(l + 1), u.v0, out_np)
+                    if out_np is None:
+                        rt.retire_write(_act_name(l + 1), u.v0, out_dst)
+                    else:
+                        rt.write_rows(_act_name(l + 1), u.v0, out_np)
             # barrier: layer l+1 reads act{l+1} — all writes must be down
+            # (drain_writes retires pending D2H copies first)
             rt.drain_writes()
             # act{l+1} was just rewritten: cached blocks of it (loaded by a
             # previous epoch's gathers) are stale — drop before any reader
@@ -323,7 +391,9 @@ class SSOEngine:
             self._materialized_grads.add(("snapdisk", layer, p))
 
     def _load_snap(self, layer: int, p: int, n_req: int) -> np.ndarray:
-        return self.storage.read_rows(_snap_name(layer, p), 0, n_req)
+        # routed through the I/O queue: a dirty snap eviction spills through
+        # the same FIFO, so this read always sees the spilled data
+        return self._io_read(_snap_name(layer, p), 0, n_req)
 
     def _snapshot_prefetch(self, layer: int, u: WorkUnit) -> None:
         """Stage-1 for snapshot-mode backward: warm the unit's snapshot (a
@@ -340,7 +410,7 @@ class SSOEngine:
     def _snapshot_get(self, layer: int, p: int, u: WorkUnit) -> np.ndarray:
         arr = self.cache.peek(("snap", layer, p))
         if arr is None:
-            arr = self.storage.read_rows(_snap_name(layer, p), 0, u.n_req)
+            arr = self._io_read(_snap_name(layer, p), 0, u.n_req)
             self.counters.bump("cache_misses")
         else:
             self.counters.bump("cache_hits")
@@ -352,10 +422,10 @@ class SSOEngine:
         return buf
 
     # ------------------------------------------------------- grad write-back
-    def _grad_read(self, name: str, a0: int, a1: int) -> np.ndarray:
-        """Grad-file read, routed through the storage I/O queue when
-        pipelined: the queue's FIFO orders it behind any in-flight
-        degraded-mode spill write of the same region."""
+    def _io_read(self, name: str, a0: int, a1: int) -> np.ndarray:
+        """Ranged read routed through the storage I/O queue when pipelined:
+        the queue's FIFO orders it behind any in-flight write of the same
+        region (degraded-mode grad spills and dirty cache evictions)."""
         w = self._rt.writer
         if w is not None:
             return w.submit_read(name, a0, a1).result()
@@ -374,7 +444,7 @@ class SSOEngine:
         buf = self.cache.acquire(key)
         if buf is None:
             if ("gradmat", layer, q) in self._materialized_grads:
-                buf = self._grad_read(name, a0, a1)
+                buf = self._io_read(name, a0, a1)
             else:
                 buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
                 self._materialized_grads.add(("gradmat", layer, q))
@@ -408,7 +478,7 @@ class SSOEngine:
             a0, a1 = u.v0, u.v1
             buf = self.cache.peek(key)
             if buf is None and ("gradmat", layer, p) in self._materialized_grads:
-                buf = self._grad_read(_grad_name(layer), a0, a1)
+                buf = self._io_read(_grad_name(layer), a0, a1)
             out = self._rt.pool.acquire((u.d_pad, self.dims[layer]), self.dtype)
             if buf is None:       # never materialized: ∇A rows are zero
                 out[:] = 0
@@ -439,6 +509,7 @@ class SSOEngine:
         # write-behind queue when degraded.
         total_loss = 0.0
         units = [plan.unit(p) for p in plan.schedule]
+        use_xfer = self._use_xfer
 
         def loss_fetch(u: WorkUnit) -> np.ndarray:
             logits = st.read_rows(_act_name(L), u.v0, u.v1)
@@ -447,20 +518,45 @@ class SSOEngine:
             lg[u.n_dst :] = 0
             return lg
 
-        for u, lg, _ in rt.run_stream(
-            units, loss_fetch,
-            gather_stage="loss_fetch", wait_stage="compute_wait_loss",
-        ):
+        def _pad_labels(u: WorkUnit) -> np.ndarray:
             lb = np.full((u.d_pad,), -1, np.int32)
             lb[: u.n_dst] = labels_reordered[u.v0 : u.v1].astype(np.int32)
-            self.counters.h2d_bytes += lg.nbytes
-            loss_p, dlog = loss_fn(
-                jnp.asarray(lg), jnp.asarray(lb), jnp.float32(n)
-            )
-            total_loss += float(loss_p)
-            dlog_np = np.asarray(dlog[: u.n_dst])
-            self.counters.d2h_bytes += dlog_np.nbytes
+            return lb
+
+        def loss_transfer(u: WorkUnit, lg: np.ndarray, _aux):
+            # stage logits AND padded labels on the transfer thread
+            lb = _pad_labels(u)
+            lg_dev = self._h2d(lg)
+            lb_dev = jnp.asarray(lb)   # lb is freshly owned: aliasing is fine
+            self.counters.bump("h2d_bytes", lg.nbytes + lb.nbytes)
             rt.pool.release(lg)
+            return (lg_dev, lb_dev), None
+
+        for u, lg, _ in rt.run_stream(
+            units, loss_fetch,
+            transfer_fn=loss_transfer if use_xfer else None,
+            gather_stage="loss_fetch", wait_stage="compute_wait_loss",
+            xfer_wait_stage="compute_wait_xfer_loss",
+            xfer_up_stage="xfer_wait_up_loss",
+        ):
+            if use_xfer:
+                lg_dev, lb_dev = lg
+                lg_host = None
+            else:
+                lg_host = lg
+                lb = _pad_labels(u)
+                # count labels too, matching the transfer-stage path
+                self.counters.bump("h2d_bytes", lg.nbytes + lb.nbytes)
+                lg_dev, lb_dev = jnp.asarray(lg), jnp.asarray(lb)
+            loss_p, dlog = loss_fn(lg_dev, lb_dev, jnp.float32(n))
+            dlog_dst = dlog[: u.n_dst]
+            # start the D2H copy; it lands while the loss scalar transfers
+            dlog_dst.copy_to_host_async()
+            total_loss += float(loss_p)
+            dlog_np = np.asarray(dlog_dst)
+            self.counters.bump("d2h_bytes", dlog_np.nbytes)
+            if lg_host is not None:
+                rt.pool.release(lg_host)
             with PhaseTimer(self.counters, "scatter"):
                 self._grad_accumulate(L, u.p, np.arange(u.n_dst), dlog_np)
 
@@ -494,27 +590,56 @@ class SSOEngine:
                 if (self.pipeline.enabled and self.pipeline.aux_fetch)
                 else None
             )
+            use_xfer = self._use_xfer
+
+            def bwd_transfer(u, ga, d_out, _l=l):
+                # stage GA and ∇A^{l+1} on the transfer thread; when the aux
+                # stage is off, its fetch also lands here (still off the
+                # compute thread)
+                if d_out is None:
+                    d_out = self._grad_fetch(_l + 1, u.p)
+                ga_dev = self._h2d(ga)
+                do_dev = self._h2d(d_out)
+                self.counters.bump("h2d_bytes", ga.nbytes + d_out.nbytes)
+                rt.pool.release(ga)
+                rt.pool.release(d_out)
+                return ga_dev, do_dev
+
             for u, ga, d_out in rt.run_stream(
                 units, gather_fn, prefetch_fn, aux_fn=aux_fn,
+                transfer_fn=bwd_transfer if use_xfer else None,
                 prefetch_stage=prefetch_stage, gather_stage=gather_stage,
                 aux_stage="grad_fetch", wait_stage="compute_wait_bwd",
+                xfer_wait_stage="compute_wait_xfer_bwd",
+                xfer_up_stage="xfer_wait_up_bwd",
             ):
-                if d_out is None:  # aux stage disabled: fetch inline
+                if not use_xfer and d_out is None:
+                    # aux stage disabled: fetch inline
                     d_out = self._grad_fetch(l + 1, u.p)
                 with PhaseTimer(self.counters, "compute_bwd"):
-                    self.counters.h2d_bytes += ga.nbytes + d_out.nbytes
-                    dp, dga = bwd(
-                        params[l], jnp.asarray(ga), u.topo, jnp.asarray(d_out)
-                    )
+                    if use_xfer:
+                        ga_dev, do_dev = ga, d_out
+                        ga = d_out = None
+                    else:
+                        self.counters.bump(
+                            "h2d_bytes", ga.nbytes + d_out.nbytes
+                        )
+                        ga_dev, do_dev = jnp.asarray(ga), jnp.asarray(d_out)
+                    dp, dga = bwd(params[l], ga_dev, u.topo, do_dev)
+                    dga_req = dga[: u.n_req]
+                    # start the D2H copy; it lands under the dW accumulate
+                    dga_req.copy_to_host_async()
                     dW_acc = (
                         dp
                         if dW_acc is None
                         else jax.tree.map(jnp.add, dW_acc, dp)
                     )
-                    dga_np = np.asarray(dga[: u.n_req])
-                    self.counters.d2h_bytes += dga_np.nbytes
-                rt.pool.release(ga)
-                rt.pool.release(d_out)
+                    dga_np = np.asarray(dga_req)
+                    self.counters.bump("d2h_bytes", dga_np.nbytes)
+                if ga is not None:
+                    rt.pool.release(ga)
+                if d_out is not None:
+                    rt.pool.release(d_out)
                 if l > 0:
                     # scatter ∇GA rows back to their source partitions
                     with PhaseTimer(self.counters, "scatter"):
@@ -546,4 +671,9 @@ class SSOEngine:
         return loss, grads
 
     def close(self) -> None:
-        self._rt.close()
+        try:
+            self._rt.close()
+        finally:
+            # the runtime's writer is gone: later cache evictions must not
+            # submit spills to a closed queue, even if close() raised
+            self.cache.set_spill_queue(None)

@@ -43,6 +43,23 @@ def remap_edge_weight(
     new_dst = np.repeat(np.arange(n, dtype=np.int64), np.diff(rg.indptr))
     key_new = ro.perm[new_dst] * n + ro.perm[rg.indices.astype(np.int64)]
     pos = np.searchsorted(key_sorted, key_new)
+    # searchsorted only returns an insertion point: a reordered edge with no
+    # counterpart in the original graph would silently pick up a neighbor's
+    # weight, so verify every looked-up key actually matches
+    if key_new.size:
+        if key_sorted.size == 0:
+            raise ValueError(
+                "remap_edge_weight: original graph has no edges but the "
+                f"reordered graph has {key_new.size}"
+            )
+        safe = np.minimum(pos, key_sorted.size - 1)
+        bad = (pos >= key_sorted.size) | (key_sorted[safe] != key_new)
+        if bad.any():
+            raise ValueError(
+                "remap_edge_weight: reordered graph contains edges absent "
+                f"from the original graph ({int(bad.sum())} unmatched of "
+                f"{key_new.size})"
+            )
     return w_sorted[pos].astype(np.float32)
 
 

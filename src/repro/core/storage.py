@@ -187,6 +187,11 @@ class StorageIOQueue:
         self._q: deque = deque()
         self._inflight_bytes = 0
         self._inflight_ops = 0
+        # id()s of write payloads queued but not yet on storage — the queue
+        # holds a reference to each, so an id stays valid while tracked.
+        # BufferPool.release consults this via owns() to refuse recycling a
+        # buffer whose write-behind hasn't retired.
+        self._inflight_write_ids: set = set()
         self.max_inflight_observed = 0
         self._closed = False
         self._exc: Optional[BaseException] = None
@@ -200,15 +205,25 @@ class StorageIOQueue:
     def inflight_bytes(self) -> int:
         return self._inflight_bytes
 
-    def submit_write(self, name: str, row0: int, arr: np.ndarray) -> cf.Future:
+    def owns(self, arr: np.ndarray) -> bool:
+        """True while ``arr`` is queued as a write payload that has not yet
+        retired to storage (recycling it would corrupt the pending write)."""
+        with self._cond:
+            return id(arr) in self._inflight_write_ids
+
+    def submit_write(self, name: str, row0: int, arr: np.ndarray,
+                     wait: bool = True) -> cf.Future:
         """Queue a ranged write. The caller must not mutate ``arr`` after
-        submission (the queue does not copy)."""
+        submission (the queue does not copy). ``wait=False`` skips the
+        byte backpressure — for callers that must not block while holding
+        a lock (the cache's dirty-eviction spill); the bytes still count
+        toward the in-flight total that throttles regular writers."""
         nb = int(arr.nbytes)
         t0 = time.perf_counter()
         with self._cond:
             if self._closed:
                 raise RuntimeError("StorageIOQueue is closed")
-            while (
+            while wait and (
                 self._inflight_bytes > 0
                 and self._inflight_bytes + nb > self.max_inflight
             ):
@@ -219,6 +234,7 @@ class StorageIOQueue:
             self._q.append(("w", (name, row0, arr), fut))
             self._inflight_bytes += nb
             self._inflight_ops += 1
+            self._inflight_write_ids.add(id(arr))
             self.max_inflight_observed = max(
                 self.max_inflight_observed, self._inflight_bytes
             )
@@ -287,6 +303,7 @@ class StorageIOQueue:
                     self._exc = e
                     if kind == "w":
                         self._inflight_bytes -= int(payload[2].nbytes)
+                        self._inflight_write_ids.discard(id(payload[2]))
                     self._inflight_ops -= 1
                     self._cond.notify_all()
                 fut.set_exception(e)
@@ -298,6 +315,7 @@ class StorageIOQueue:
             with self._cond:
                 if kind == "w":
                     self._inflight_bytes -= int(payload[2].nbytes)
+                    self._inflight_write_ids.discard(id(payload[2]))
                 self._inflight_ops -= 1
                 self._cond.notify_all()
             fut.set_result(res)

@@ -17,7 +17,8 @@ import argparse
 import sys
 
 
-def _offload_smoke(model: str, depth: int, gather_workers: int = 1) -> dict:
+def _offload_smoke(model: str, depth: int, gather_workers: int = 1,
+                   transfer_stage: bool = True, device_slots: int = 2) -> dict:
     """Drive the SSO engine (serial + pipelined) for a GNN arch."""
     import tempfile
 
@@ -50,7 +51,9 @@ def _offload_smoke(model: str, depth: int, gather_workers: int = 1) -> dict:
         cache = HostCache(4 << 20, st_, c)
         eng = SSOEngine(spec, plan, dims, st_, cache, c,
                         pipeline=PipelineConfig(
-                            depth=d, gather_workers=gather_workers))
+                            depth=d, gather_workers=gather_workers,
+                            transfer_stage=transfer_stage,
+                            device_slots=device_slots))
         eng.initialize(X)
         loss, grads = eng.run_epoch(params, Y)
         eng.close()
@@ -84,6 +87,10 @@ def main():
                          "(0 = serial engine)")
     ap.add_argument("--gather-workers", type=int, default=1,
                     help="parallel host-gather workers for --offload")
+    ap.add_argument("--device-slots", type=int, default=2,
+                    help="device staging slots for the transfer stage")
+    ap.add_argument("--no-transfer-stage", action="store_true",
+                    help="disable the async H2D/D2H device-transfer stage")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
 
@@ -108,7 +115,9 @@ def main():
         # GNN ArchSpecs don't carry the model id directly; recover it from
         # the config module naming convention (gcn-cora -> gcn, ...)
         model = args.arch.split("-")[0]
-        r = _offload_smoke(model, args.pipeline_depth, args.gather_workers)
+        r = _offload_smoke(model, args.pipeline_depth, args.gather_workers,
+                           transfer_stage=not args.no_transfer_stage,
+                           device_slots=args.device_slots)
         print(f"{args.arch} offload smoke: {r}")
         ok = r.get("finite") and r.get("pipeline_matches_serial", True)
         sys.exit(0 if ok else 1)

@@ -5,12 +5,14 @@ write-behind, over bounded queues with stall/overlap accounting in
 :class:`repro.core.counters.Counters`.
 """
 from repro.runtime.config import PipelineConfig
-from repro.runtime.executor import BufferPool, PipelineExecutor
+from repro.runtime.executor import (
+    BufferPool, DeviceSlotPool, PipelineExecutor,
+)
 from repro.runtime.queues import (
     DONE, PipelineAbort, ReassemblyBuffer, StageQueue,
 )
 
 __all__ = [
-    "PipelineConfig", "PipelineExecutor", "BufferPool",
+    "PipelineConfig", "PipelineExecutor", "BufferPool", "DeviceSlotPool",
     "StageQueue", "ReassemblyBuffer", "PipelineAbort", "DONE",
 ]

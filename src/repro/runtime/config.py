@@ -42,6 +42,27 @@ class PipelineConfig:
         (``StorageTier.read_rows_batched``) covering every missing source
         partition, instead of one ``read_rows`` per partition — paying the
         per-op latency once per unit.
+    transfer_stage
+        Run host→device staging on a dedicated transfer thread: the next
+        unit's gathered buffer (and aux grad) is ``jax.device_put`` onto the
+        device while the current unit's kernel runs, bounded by
+        ``device_slots``. The compute loop then consumes pre-staged device
+        arrays instead of paying the H2D copy inline.
+    device_slots
+        Device-side staging slots for the transfer stage. ``2`` is classic
+        double buffering (one unit's inputs feeding the kernel, one being
+        staged); ``1`` serializes each H2D copy behind the previous unit's
+        compute (still correct, no staging ahead).
+    async_d2h
+        Retire D2H results asynchronously: the compute loop starts
+        ``copy_to_host_async`` on the device output and hands it to a retire
+        thread that runs the deferred ``np.asarray`` and submits the bypass
+        write — the compute loop never blocks on the device→host copy.
+    pool_max_bytes
+        Cap on bytes parked in the :class:`BufferPool` free lists. On
+        overflow the stalest shape bucket is dropped (counted as
+        ``pool_trims``) so long multi-epoch runs can't pin peak gather
+        footprint forever.
     """
 
     depth: int = 0
@@ -52,6 +73,10 @@ class PipelineConfig:
     gather_workers: int = 1
     aux_fetch: bool = True
     batched_reads: bool = True
+    transfer_stage: bool = True
+    device_slots: int = 2
+    async_d2h: bool = True
+    pool_max_bytes: int = 256 << 20
 
     @property
     def enabled(self) -> bool:

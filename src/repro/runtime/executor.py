@@ -2,9 +2,10 @@
 
 Turns each per-partition work unit into a multi-stage job
 
-    storage-read / prefetch  ->  host gather  ->  device compute  ->  bypass
-         (worker thread)        (worker thread)     (main loop)     write-behind
-                                                                    (I/O thread)
+    storage-read / prefetch -> host gather -> device transfer -> device compute
+         (worker thread)       (worker threads)  (H2D thread)     (main loop)
+                                                                      |
+                 bypass write-behind (I/O thread) <- D2H retire (retire thread)
 
 flowing through bounded stage queues. The compute stage stays on the caller
 thread and consumes gathered buffers strictly in schedule order, so a
@@ -12,27 +13,34 @@ pipelined run executes the exact same floating-point program as the serial
 one — ``depth=0`` *is* the serial engine, and ``depth>=1`` is bit-identical
 to it (asserted by the equivalence tests). What the pipeline changes is only
 *when* the I/O happens: partition reads and host gathers for units
-``i+1..i+depth`` run while unit ``i`` computes, and bypass writes retire on
-the storage I/O queue behind the compute.
+``i+1..i+depth`` run while unit ``i`` computes, the next unit's inputs are
+staged onto the device (``jax.device_put`` on the transfer thread, bounded
+by :class:`DeviceSlotPool` slots) while the current unit's kernel runs, and
+bypass writes retire on the storage I/O queue behind the compute — with
+``async_d2h`` the device→host result copy itself retires on a dedicated
+thread (``copy_to_host_async`` + deferred ``np.asarray``), so the compute
+loop never blocks on either direction of the host↔device link.
 
 The gather stage may be sharded across ``gather_workers`` threads; their
 out-of-order completions are rejoined by a sequence-numbered
-:class:`~repro.runtime.queues.ReassemblyBuffer` before the compute stage
-sees them. An optional per-unit aux-fetch (the backward's ∇A^{l+1} read)
-rides on the gather stage so the entire backward's storage traffic — loss
-logits reads, regather/snapshot fetches, grad fetches, and degraded-mode
-grad spills — is off the compute thread.
+:class:`~repro.runtime.queues.ReassemblyBuffer` before the transfer (or
+compute) stage sees them. An optional per-unit aux-fetch (the backward's
+∇A^{l+1} read) rides on the gather stage so the entire backward's storage
+traffic — loss logits reads, regather/snapshot fetches, grad fetches, and
+degraded-mode grad spills — is off the compute thread.
 
 Gather outputs are recycled through a :class:`BufferPool` — with ``depth=1``
 this is classic double buffering (one buffer on device feed, one being
 assembled), and queue capacity bounds live buffers at ``capacity + 1`` per
-shape bucket.
+shape bucket. The pool's free lists are byte-capped (stalest shape bucket
+dropped on overflow) so multi-epoch runs don't pin their peak footprint.
 """
 from __future__ import annotations
 
 import threading
 import time
-from collections import defaultdict
+import weakref
+from collections import OrderedDict, deque
 from typing import Callable, Iterable, List, Optional
 
 import numpy as np
@@ -50,34 +58,172 @@ class BufferPool:
     """Reusable host-side gather output buffers, keyed by (shape, dtype).
 
     The plan's pow2 padding buckets mean a handful of distinct shapes per
-    layer, so recycling eliminates nearly all steady-state allocation. The
-    free list is unbounded but the pipeline's bounded queues keep at most
-    ``capacity + 1`` buffers of a shape in flight."""
+    layer, so recycling eliminates nearly all steady-state allocation; the
+    pipeline's bounded queues keep at most ``capacity + 1`` buffers of a
+    shape in flight.
 
-    def __init__(self):
-        self._free = defaultdict(list)
+    Two hygiene guards on top of the plain free-list design:
+
+    - ``max_bytes`` caps the total bytes parked on free lists. On overflow
+      the least-recently-used shape bucket is dropped wholesale (``trims``
+      counts buckets, and ``pool_trims`` on the shared counters), so a long
+      multi-epoch run whose layer shapes drift doesn't pin its all-time peak
+      footprint forever.
+    - ``release`` refuses buffers that are unsafe to recycle: non-ndarray
+      objects (e.g. a device array reaching a host-buffer release path),
+      non-contiguous or view arrays (a recycled view would alias its base),
+      buffers the pool never issued, and buffers still owned by a pending
+      ``StorageIOQueue.submit_write`` (``owner_check``). Rejected releases
+      are silently dropped and counted (``pool_release_rejects``) — the
+      buffer simply isn't recycled.
+    """
+
+    def __init__(
+        self,
+        max_bytes: int = 256 << 20,
+        counters: Optional[Counters] = None,
+        owner_check: Optional[Callable[[np.ndarray], bool]] = None,
+    ):
+        self._free: "OrderedDict[tuple, list]" = OrderedDict()
         self._lock = threading.Lock()
+        # buffers currently checked out, id() -> weakref. Weakrefs (not bare
+        # ids) because a buffer dropped without release — e.g. in-flight on
+        # an aborted pipeline — is eventually gc'd and its address reused;
+        # the identity check against the live referent below keeps such a
+        # stale entry from blessing an unrelated array.
+        self._issued: dict = {}
+        self._issued_sweep_at = 256
+        self._free_bytes = 0
+        self.max_bytes = int(max_bytes)
+        self.counters = counters
+        self.owner_check = owner_check
         self.allocations = 0   # fresh np.zeros calls (for tests/telemetry)
+        self.trims = 0         # free-list buckets dropped at the byte cap
+        self.rejected = 0      # release() calls refused by the guards
+
+    @staticmethod
+    def _key(shape: tuple, dtype) -> tuple:
+        return (tuple(shape), np.dtype(dtype).str)
+
+    def _mark_issued(self, arr: np.ndarray) -> None:
+        # caller holds self._lock
+        self._issued[id(arr)] = weakref.ref(arr)
+        if len(self._issued) > self._issued_sweep_at:
+            dead = [k for k, r in self._issued.items() if r() is None]
+            for k in dead:
+                del self._issued[k]
+            self._issued_sweep_at = max(256, 2 * len(self._issued))
 
     def acquire(self, shape: tuple, dtype) -> np.ndarray:
-        key = (tuple(shape), np.dtype(dtype).str)
+        key = self._key(shape, dtype)
         with self._lock:
             lst = self._free.get(key)
             if lst:
-                return lst.pop()
+                self._free.move_to_end(key)   # bucket is live: keep it young
+                arr = lst.pop()
+                self._free_bytes -= arr.nbytes
+                self._mark_issued(arr)
+                return arr
             self.allocations += 1
-        return np.zeros(shape, dtype)
+        arr = np.zeros(shape, dtype)
+        with self._lock:
+            self._mark_issued(arr)
+        return arr
 
-    def release(self, arr: np.ndarray) -> None:
+    def _reject(self) -> None:
+        # release() is called from compute/transfer/gather threads at once
+        with self._lock:
+            self.rejected += 1
+        if self.counters is not None:
+            self.counters.bump("pool_release_rejects")
+
+    def release(self, arr) -> None:
+        if (
+            not isinstance(arr, np.ndarray)
+            or arr.base is not None
+            or not arr.flags["C_CONTIGUOUS"]
+        ):
+            self._reject()
+            return
+        if self.owner_check is not None and self.owner_check(arr):
+            self._reject()
+            return
         key = (arr.shape, arr.dtype.str)
         with self._lock:
-            self._free[key].append(arr)
+            ref = self._issued.get(id(arr))
+            if ref is None or ref() is not arr:
+                # double release, a buffer this pool never issued, or a
+                # stale id from a buffer that was dropped and gc'd
+                accepted = False
+            else:
+                accepted = True
+                del self._issued[id(arr)]
+                self._free.setdefault(key, []).append(arr)
+                self._free.move_to_end(key)
+                self._free_bytes += arr.nbytes
+                while (
+                    self._free_bytes > self.max_bytes and len(self._free) > 1
+                ):
+                    # drop the stalest bucket (not the one just released into)
+                    _, lst = self._free.popitem(last=False)
+                    self._free_bytes -= sum(a.nbytes for a in lst)
+                    self.trims += 1
+                    if self.counters is not None:
+                        self.counters.bump("pool_trims")
+        if not accepted:
+            self._reject()
+
+    @property
+    def free_bytes(self) -> int:
+        return self._free_bytes
+
+
+class DeviceSlotPool:
+    """Counted device-side staging slots for the transfer stage.
+
+    A slot is held from the moment the transfer thread begins staging a
+    unit's inputs onto the device until the compute loop finishes consuming
+    them — so ``n_slots`` bounds the number of units whose inputs are
+    device-resident at once. ``n_slots=2`` is the classic double buffer
+    (one unit feeding the kernel, one being staged); ``n_slots=1``
+    serializes every H2D copy behind the previous unit's compute. Waits are
+    abort-aware and charged to the caller's stall name.
+    """
+
+    def __init__(self, n_slots: int, counters: Counters,
+                 abort: threading.Event):
+        self.n = max(1, int(n_slots))
+        self.counters = counters
+        self.abort = abort
+        self._free = list(range(self.n))
+        self._cond = threading.Condition()
+        self.peak_in_use = 0
+
+    def acquire(self, stall_name: str = "h2d_wait_slot") -> int:
+        t0 = time.perf_counter()
+        with self._cond:
+            while not self._free:
+                if self.abort.is_set():
+                    raise PipelineAbort("device_slots")
+                self._cond.wait(0.02)
+            slot = self._free.pop()
+            self.peak_in_use = max(self.peak_in_use, self.n - len(self._free))
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall(stall_name, stall)
+        return slot
+
+    def release(self, slot: int) -> None:
+        with self._cond:
+            self._free.append(slot)
+            self._cond.notify_all()
 
 
 class PipelineExecutor:
-    """Drives work units through prefetch/gather worker stages and hands the
-    main loop (item, gathered-buffer) pairs in schedule order; owns the
-    write-behind storage queue for the bypass stage."""
+    """Drives work units through prefetch/gather/transfer worker stages and
+    hands the main loop (item, staged-buffer) tuples in schedule order; owns
+    the write-behind storage queue for the bypass stage and the D2H retire
+    thread for asynchronous result copies."""
 
     def __init__(
         self,
@@ -90,7 +236,6 @@ class PipelineExecutor:
         self.counters = counters
         self.storage = storage
         self.cache = cache
-        self.pool = BufferPool()
         self._writer: Optional[StorageIOQueue] = None
         if cfg.enabled and cfg.write_behind:
             self._writer = StorageIOQueue(
@@ -98,7 +243,22 @@ class PipelineExecutor:
                 max_inflight_bytes=cfg.max_inflight_write_bytes,
                 counters=counters,
             )
+        self.pool = BufferPool(
+            max_bytes=cfg.pool_max_bytes,
+            counters=counters,
+            owner_check=self._writer_owns,
+        )
+        # D2H retire thread (lazy): deferred np.asarray + bypass write
+        self._retire_cond = threading.Condition()
+        self._retire_q: deque = deque()
+        self._retire_inflight = 0
+        self._retire_exc: Optional[BaseException] = None
+        self._retire_thread: Optional[threading.Thread] = None
         self._closed = False
+
+    def _writer_owns(self, arr: np.ndarray) -> bool:
+        w = self._writer
+        return w is not None and w.owns(arr)
 
     # ------------------------------------------------------------ bypass I/O
     @property
@@ -113,9 +273,82 @@ class PipelineExecutor:
         else:
             self.storage.write_rows(name, row0, arr)
 
+    # ------------------------------------------------------------ D2H retire
+    def retire_write(self, name: str, row0: int, dev) -> None:
+        """Retire a device-resident result to storage: the deferred
+        ``np.asarray`` (which completes the ``copy_to_host_async`` the
+        caller already started) and the bypass write both run on the retire
+        thread, so the compute loop never blocks on the D2H copy. Counted as
+        ``d2h`` stage busy + ``d2h_bytes``. Falls back to a synchronous
+        copy-and-write when ``async_d2h`` is off or the pipeline is
+        disabled."""
+        if not (self.cfg.enabled and self.cfg.async_d2h):
+            arr = np.asarray(dev)
+            self.counters.bump("d2h_bytes", arr.nbytes)
+            self.write_rows(name, row0, arr)
+            return
+        # backpressure: each pending retire holds a device result alive, so
+        # bound them like staging slots rather than queueing without limit
+        cap = max(2, 2 * int(self.cfg.device_slots))
+        t0 = time.perf_counter()
+        with self._retire_cond:
+            if self._closed:
+                raise RuntimeError("PipelineExecutor is closed")
+            if self._retire_exc is not None:
+                raise self._retire_exc
+            if self._retire_thread is None:
+                self._retire_thread = threading.Thread(
+                    target=self._retire_worker, name="sso-d2h", daemon=True
+                )
+                self._retire_thread.start()
+            while self._retire_inflight >= cap:
+                self._retire_cond.wait(0.02)
+                if self._retire_exc is not None:
+                    raise self._retire_exc
+            self._retire_q.append((name, row0, dev))
+            self._retire_inflight += 1
+            self._retire_cond.notify_all()
+        stall = time.perf_counter() - t0
+        if stall > 0:
+            self.counters.record_stall("d2h_submit", stall)
+
+    def _retire_worker(self) -> None:
+        while True:
+            with self._retire_cond:
+                while not self._retire_q:
+                    if self._closed:
+                        return
+                    self._retire_cond.wait(0.05)
+                name, row0, dev = self._retire_q.popleft()
+            t0 = time.perf_counter()
+            try:
+                arr = np.asarray(dev)   # completes the async D2H copy
+                self.counters.bump("d2h_bytes", arr.nbytes)
+                self.write_rows(name, row0, arr)
+            except BaseException as e:  # surfaced on the next drain/retire
+                with self._retire_cond:
+                    self._retire_exc = e
+                    self._retire_inflight -= 1
+                    self._retire_cond.notify_all()
+                continue
+            self.counters.record_busy("d2h", time.perf_counter() - t0)
+            with self._retire_cond:
+                self._retire_inflight -= 1
+                self._retire_cond.notify_all()
+
+    def _drain_retires(self) -> None:
+        with self._retire_cond:
+            while self._retire_inflight > 0:
+                self._retire_cond.wait(0.05)
+            if self._retire_exc is not None:
+                exc, self._retire_exc = self._retire_exc, None
+                raise exc
+
     def drain_writes(self) -> None:
         """Barrier: all submitted bypass writes are on storage. Called at
-        layer boundaries, before anything reads the freshly written file."""
+        layer boundaries, before anything reads the freshly written file.
+        Retiring D2H copies are drained first — they feed the write queue."""
+        self._drain_retires()
         if self._writer is not None:
             self._writer.drain()
 
@@ -126,32 +359,49 @@ class PipelineExecutor:
         gather_fn: Callable,
         prefetch_fn: Optional[Callable] = None,
         aux_fn: Optional[Callable] = None,
+        transfer_fn: Optional[Callable] = None,
         prefetch_stage: str = "prefetch",
         gather_stage: str = "gather",
         aux_stage: str = "aux_fetch",
         wait_stage: str = "compute_wait",
+        xfer_wait_stage: str = "compute_wait_xfer",
+        xfer_up_stage: str = "xfer_wait_up",
     ):
-        """Yield ``(item, gather_fn(item), aux_fn(item) or None)`` in input
-        order.
+        """Yield ``(item, buf, aux)`` in input order, where
+        ``buf, aux = gather_fn(item), aux_fn(item)`` — or, when
+        ``transfer_fn`` is given, ``transfer_fn(item, buf, aux)``'s
+        replacement pair (the engine uses this to swap the host buffers for
+        pre-staged device arrays; the transfer fn takes ownership of the
+        host buffers).
 
-        Serial (``depth=0``): gather and aux run inline on the caller
-        thread, in that order — exactly the serial engine's sequence.
+        Serial (``depth=0``): gather, aux, and transfer run inline on the
+        caller thread, in that order — exactly the serial engine's sequence.
         Pipelined: a prefetch worker runs ``prefetch_fn`` up to ``depth``
         units ahead (stage-1 storage reads, cache pinning) and
         ``cfg.gather_workers`` workers assemble buffers and run the aux
         fetch (stage-2); out-of-order completions are joined by a
-        sequence-numbered :class:`ReassemblyBuffer` so the caller still
-        consumes strictly in input order. Caller wait time is charged to
-        the ``wait_stage`` stall; worker time to ``prefetch_stage`` /
-        ``gather_stage`` / ``aux_stage`` busy — phase-specific names let
+        sequence-numbered :class:`ReassemblyBuffer` so downstream stages
+        still consume strictly in input order. With ``cfg.transfer_stage``
+        and a ``transfer_fn``, a dedicated transfer thread consumes the
+        joined stream and stages each unit's inputs onto the device while
+        the previous unit computes, holding a :class:`DeviceSlotPool` slot
+        from staging until the compute loop finishes the unit (``2`` slots =
+        device-side double buffer). Caller wait time is charged to the
+        ``wait_stage`` stall (``xfer_wait_stage`` when the transfer stage is
+        on); worker time to ``prefetch_stage`` / ``gather_stage`` /
+        ``aux_stage`` / ``h2d`` busy — phase-specific names let
         :meth:`Counters.overlap_summary` split forward from backward
-        overlap.
+        overlap and report the transfer stage's own overlapped fraction.
         """
         items = list(items)
+        use_xfer = transfer_fn is not None and self.cfg.transfer_stage
         if not self.cfg.enabled or len(items) <= 1:
             for it in items:
                 buf = gather_fn(it)
                 aux = aux_fn(it) if aux_fn is not None else None
+                if use_xfer:   # same gating as the pipelined path, so the
+                    # yielded shape never depends on the item count
+                    buf, aux = transfer_fn(it, buf, aux)
                 yield it, buf, aux
             return
 
@@ -211,15 +461,55 @@ class PipelineExecutor:
             )
             for i in range(nworkers)
         ]
+
+        slots: Optional[DeviceSlotPool] = None
+        q_dev: Optional[StageQueue] = None
+        if use_xfer:
+            slots = DeviceSlotPool(self.cfg.device_slots, c, abort)
+            q_dev = StageQueue("xfer_out", slots.n, c, abort)
+
+            def _transfer_worker():
+                try:
+                    for seq in range(len(items)):
+                        it, buf, aux = reasm.get(seq, stall_name=xfer_up_stage)
+                        slot = slots.acquire()
+                        t0 = time.perf_counter()
+                        buf, aux = transfer_fn(it, buf, aux)
+                        c.record_busy("h2d", time.perf_counter() - t0)
+                        q_dev.put((it, buf, aux, slot))
+                except PipelineAbort:
+                    pass
+                except BaseException as e:
+                    errors.append(e)
+                    abort.set()
+
+            threads.append(
+                threading.Thread(
+                    target=_transfer_worker, name="sso-h2d", daemon=True
+                )
+            )
+
         for t in threads:
             t.start()
         try:
             for seq in range(len(items)):
-                try:
-                    it, buf, aux = reasm.get(seq, stall_name=wait_stage)
-                except PipelineAbort:
-                    break
-                yield it, buf, aux
+                if use_xfer:
+                    try:
+                        it, buf, aux, slot = q_dev.get(
+                            stall_name=xfer_wait_stage
+                        )
+                    except PipelineAbort:
+                        break
+                    yield it, buf, aux
+                    # the unit's device inputs are consumed: free its slot so
+                    # the transfer thread can stage the next-but-one unit
+                    slots.release(slot)
+                else:
+                    try:
+                        it, buf, aux = reasm.get(seq, stall_name=wait_stage)
+                    except PipelineAbort:
+                        break
+                    yield it, buf, aux
         finally:
             abort.set()
             for t in threads:
@@ -229,8 +519,19 @@ class PipelineExecutor:
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
+        """Flush pending retires and writes, then stop the worker threads.
+        Shutdown always completes — a pending retire error is re-raised
+        only after the threads are joined and the writer is closed."""
         if self._closed:
             return
         self._closed = True
-        if self._writer is not None:
-            self._writer.close()
+        try:
+            self._drain_retires()   # worker keeps servicing until q empties
+        finally:
+            t = self._retire_thread
+            if t is not None:
+                with self._retire_cond:
+                    self._retire_cond.notify_all()
+                t.join(timeout=5)
+            if self._writer is not None:
+                self._writer.close()

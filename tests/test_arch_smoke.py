@@ -7,6 +7,7 @@ from repro.configs import ASSIGNED, REGISTRY, list_cells
 
 
 @pytest.mark.parametrize("arch", ASSIGNED + ["gcn-igbm-3l"])
+@pytest.mark.slow
 def test_smoke(arch):
     r = REGISTRY[arch].smoke()
     assert r["finite"], r

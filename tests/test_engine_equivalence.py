@@ -1,6 +1,10 @@
 """THE core correctness property (paper Appendix W): the SSO engine —
 regather or snapshot — produces gradients equal to whole-graph autodiff up
-to float reassociation, for every model, for any partitioning."""
+to float reassociation, for every model, for any partitioning.
+
+Marked slow (multi-second oracle runs per model); the CI fast job skips it
+— the cheap pipelined-vs-serial equivalence checks live in
+tests/test_runtime.py."""
 import tempfile
 
 import jax
@@ -20,6 +24,8 @@ from repro.graph.synthetic import random_features, random_labels
 from repro.models.gnn.layers import (
     full_graph_loss, full_graph_topo, get_gnn,
 )
+
+pytestmark = pytest.mark.slow
 
 
 def _setup(n_nodes=1200, n_parts=6, d_in=24, seed=0):

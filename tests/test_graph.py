@@ -157,3 +157,50 @@ class TestSampler:
                 s_g = int(l.node_ids[l.src_index[e]])
                 d_g = int(l.node_ids[l.dst_index[e]])
                 assert (s_g, d_g) in edges
+
+
+class TestRemapEdgeWeight:
+    def test_remap_roundtrip(self, tiny_graph):
+        from repro.core.plan import remap_edge_weight
+
+        g = tiny_graph
+        parts = random_partition(g.n_nodes, 4, seed=0)
+        ro = reorder_by_partition(g, parts, 4)
+        w = np.arange(g.n_edges, dtype=np.float32)
+        w_new = remap_edge_weight(g, ro, w)
+        # spot-check: each reordered edge carries its original weight
+        rg = ro.graph
+        new_dst = np.repeat(np.arange(g.n_nodes), np.diff(rg.indptr))
+        old_pairs = {}
+        od = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
+        for e in range(g.n_edges):
+            old_pairs[(int(od[e]), int(g.indices[e]))] = w[e]
+        for e in range(0, rg.indptr[-1], max(1, g.n_edges // 64)):
+            d, s = int(ro.perm[new_dst[e]]), int(ro.perm[rg.indices[e]])
+            assert w_new[e] == old_pairs[(d, s)]
+
+    def test_remap_rejects_malformed_reordered_graph(self, tiny_graph):
+        """Satellite regression: a reordered graph whose edges don't exist
+        in the original must raise instead of silently picking up a
+        neighbor's weight via the raw searchsorted insertion point."""
+        from repro.core.plan import remap_edge_weight
+
+        g = tiny_graph
+        parts = random_partition(g.n_nodes, 4, seed=0)
+        ro = reorder_by_partition(g, parts, 4)
+        w = np.ones(g.n_edges, np.float32)
+        # corrupt one adjacency entry to an edge that does not exist
+        bad = ro.graph.indices.copy()
+        orig = bad[0]
+        for cand in range(g.n_nodes):
+            if cand != orig:
+                bad[0] = cand
+                try:
+                    probe = CSRGraph(indptr=ro.graph.indptr, indices=bad,
+                                     n_nodes=g.n_nodes)
+                    import dataclasses
+                    ro_bad = dataclasses.replace(ro, graph=probe)
+                    remap_edge_weight(g, ro_bad, w)
+                except ValueError:
+                    return   # raised as required
+        pytest.fail("malformed reordered graph did not raise")

@@ -45,6 +45,7 @@ class TestChunkedAttention:
         np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.slow
 class TestDecodeConsistency:
     def _roundtrip(self, cfg, T=16):
         params = init_lm_params(jax.random.PRNGKey(0), cfg)

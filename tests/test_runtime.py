@@ -36,7 +36,8 @@ def _setup(n_nodes=900, n_parts=5, d_in=16, seed=0):
 
 
 def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1,
-         gather_workers=1):
+         gather_workers=1, transfer_stage=True, device_slots=2,
+         async_d2h=True):
     spec = get_gnn("gcn")
     params = spec.init(jax.random.PRNGKey(0), dims[0], dims[1], dims[-1],
                        len(dims) - 1)
@@ -45,7 +46,10 @@ def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1,
     cache = HostCache(budget_kb << 10, st_, c)
     eng = SSOEngine(
         spec, plan, dims, st_, cache, c, mode=mode,
-        pipeline=PipelineConfig(depth=depth, gather_workers=gather_workers),
+        pipeline=PipelineConfig(depth=depth, gather_workers=gather_workers,
+                                transfer_stage=transfer_stage,
+                                device_slots=device_slots,
+                                async_d2h=async_d2h),
     )
     eng.initialize(Xr)
     for _ in range(epochs):
@@ -425,6 +429,137 @@ def test_plan_lookahead_and_upcoming_parts():
     assert plan.upcoming_parts(len(sched) - 1, 2).size == 0
 
 
+# ------------------------------------------------- device-transfer stage
+@pytest.mark.parametrize("mode", ["regather", "snapshot"])
+@pytest.mark.parametrize("slots", [1, 2])
+def test_transfer_stage_bit_identical(mode, slots):
+    """Satellite: the async H2D/D2H device-transfer stage (at 1 and 2 device
+    slots) must not change the math — forward, regather and snapshot
+    backward all stay bit-identical to the serial engine."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, mode, depth=0)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=2,
+                      transfer_stage=True, device_slots=slots)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+    # H2D staging and D2H retire really ran on the transfer/retire threads
+    assert c1.stage_busy_seconds.get("h2d", 0.0) > 0.0
+    assert c1.stage_busy_seconds.get("d2h", 0.0) > 0.0
+
+
+def test_transfer_stage_off_bit_identical():
+    """The inline jnp.asarray path (transfer stage disabled) remains
+    available and bit-identical."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, "regather", depth=0)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, "regather", depth=2,
+                      transfer_stage=False)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+    assert "h2d" not in c1.stage_busy_seconds
+
+
+def test_transfer_stage_sync_d2h_bit_identical():
+    """async_d2h off: H2D staging still on the transfer thread, result
+    copies synchronous — still bit-identical."""
+    plan, Xr, Yr = _setup(n_nodes=500, n_parts=4)
+    dims = [16, 16, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, "regather", depth=0)
+    l1, g1, _ = _run(plan, Xr, Yr, dims, "regather", depth=2,
+                     async_d2h=False)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+
+
+def test_device_slot_pool_bounds_staging():
+    import threading
+
+    from repro.runtime import DeviceSlotPool, PipelineExecutor
+
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    rt = PipelineExecutor(
+        PipelineConfig(depth=4, gather_workers=2, device_slots=2), c, st_
+    )
+    items = list(range(20))
+    lock = threading.Lock()
+    staged = {"cur": 0, "peak": 0}
+
+    def transfer_fn(i, buf, aux):
+        with lock:
+            staged["cur"] += 1
+            staged["peak"] = max(staged["peak"], staged["cur"])
+        return buf + 1, aux
+
+    out = []
+    for it, buf, aux in rt.run_stream(
+        items, lambda i: i * 10, transfer_fn=transfer_fn
+    ):
+        time.sleep(0.001)   # let the transfer thread try to run ahead
+        with lock:
+            staged["cur"] -= 1
+        out.append((it, buf, aux))
+    assert out == [(i, i * 10 + 1, None) for i in items]
+    # staged-but-unconsumed units never exceed the slot count
+    assert staged["peak"] <= 2
+    assert c.stage_busy_seconds.get("h2d", 0.0) > 0.0
+    rt.close()
+    st_.close()
+
+    # the pool primitive itself: acquire blocks at capacity, release wakes
+    abort = threading.Event()
+    pool = DeviceSlotPool(1, c, abort)
+    s0 = pool.acquire()
+    got = []
+    t = threading.Thread(target=lambda: got.append(pool.acquire()))
+    t.start()
+    time.sleep(0.05)
+    assert not got          # second acquire is blocked on the single slot
+    pool.release(s0)
+    t.join(timeout=2)
+    assert got and pool.peak_in_use == 1
+
+
+def test_run_stream_serial_applies_transfer_inline():
+    from repro.runtime import PipelineExecutor
+
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    rt = PipelineExecutor(PipelineConfig(depth=0), c, st_)
+    out = list(rt.run_stream(
+        [1, 2], lambda i: i * 10,
+        transfer_fn=lambda i, buf, aux: (buf + 5, aux),
+    ))
+    assert out == [(1, 15, None), (2, 25, None)]
+    rt.close()
+    st_.close()
+
+
+def test_retire_write_lands_and_drains(rng):
+    """retire_write: copy_to_host_async + deferred np.asarray on the retire
+    thread; drain_writes barriers both the retire queue and the writer."""
+    from repro.runtime import PipelineExecutor
+
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (64, 8), np.float32)
+    rt = PipelineExecutor(PipelineConfig(depth=2), c, st_)
+    x = rng.standard_normal((64, 8)).astype(np.float32)
+    dev = jax.device_put(x)
+    for i in range(8):
+        sl = dev[i * 8 : (i + 1) * 8]
+        sl.copy_to_host_async()
+        rt.retire_write("a", i * 8, sl)
+    rt.drain_writes()
+    np.testing.assert_array_equal(st_.read_rows("a", 0, 64), x)
+    assert c.stage_busy_seconds.get("d2h", 0.0) > 0.0
+    assert c.d2h_bytes == x.nbytes
+    rt.close()
+    st_.close()
+
+
 # --------------------------------------------------------------- buffer pool
 def test_buffer_pool_recycles():
     pool = BufferPool()
@@ -436,6 +571,100 @@ def test_buffer_pool_recycles():
     cdiff = pool.acquire((8, 8), np.float32)
     assert cdiff is not a
     assert pool.allocations == 2
+
+
+def test_buffer_pool_byte_cap_trims_stalest_bucket():
+    """Satellite: free lists are byte-capped — the stalest shape bucket is
+    dropped on overflow instead of pinning peak memory forever."""
+    c = Counters()
+    one = 32 * 32 * 4
+    pool = BufferPool(max_bytes=3 * one, counters=c)
+    a = pool.acquire((32, 32), np.float32)     # bucket A
+    b = pool.acquire((16, 64), np.float32)     # bucket B (same nbytes)
+    pool.release(a)
+    pool.release(b)                            # A is now the stalest bucket
+    extra = [pool.acquire((8, 128), np.float32) for _ in range(3)]
+    for e in extra:                            # bucket C overflows the cap
+        pool.release(e)
+    assert pool.trims >= 1
+    assert c.pool_trims == pool.trims
+    assert pool.free_bytes <= pool.max_bytes
+    # the stalest bucket (A) was dropped; a fresh acquire must allocate
+    n0 = pool.allocations
+    a2 = pool.acquire((32, 32), np.float32)
+    assert a2 is not a
+    assert pool.allocations == n0 + 1
+
+
+def test_buffer_pool_release_guards(rng):
+    """Satellite: release refuses non-contiguous views, foreign/duplicate
+    buffers, non-ndarrays, and buffers still owned by a pending
+    submit_write."""
+    c = Counters()
+    pool = BufferPool(counters=c)
+    a = pool.acquire((16, 8), np.float32)
+    pool.release(a[:4])                 # view of a pooled buffer
+    pool.release(np.zeros((4, 4))[::2])  # non-contiguous
+    pool.release("not an array")
+    pool.release(np.zeros((4, 4), np.float32))  # never issued by this pool
+    assert pool.rejected == 4
+    assert c.pool_release_rejects == 4
+    pool.release(a)
+    pool.release(a)                     # double release: second is refused
+    assert pool.rejected == 5
+
+    # ownership: a buffer queued on the write-behind path must not recycle
+    class SlowTier(StorageTier):
+        def write_rows(self, name, row0, arr):
+            time.sleep(0.05)
+            super().write_rows(name, row0, arr)
+
+    st_ = SlowTier(tempfile.mkdtemp(), counters=c)
+    st_.alloc("a", (64, 8), np.float32)
+    q = StorageIOQueue(st_, counters=c)
+    pool2 = BufferPool(counters=c, owner_check=q.owns)
+    buf = pool2.acquire((8, 8), np.float32)
+    buf[:] = rng.standard_normal((8, 8)).astype(np.float32)
+    q.submit_write("a", 0, buf)
+    pool2.release(buf)                  # write still in flight: refused
+    assert pool2.rejected == 1
+    q.drain()
+    pool2.release(buf)                  # retired: recycles fine
+    assert pool2.acquire((8, 8), np.float32) is buf
+    q.close()
+    st_.close()
+
+
+def test_recycled_buffer_tails_zeroed_in_grad_and_loss_paths():
+    """Satellite regression: a recycled pool buffer full of garbage must not
+    leak into the padded tail rows of grad-fetch or loss-fetch outputs."""
+    plan, Xr, Yr = _setup(n_nodes=500, n_parts=4)
+    dims = [16, 16, 8]
+    spec = get_gnn("gcn")
+    params = spec.init(jax.random.PRNGKey(0), 16, 16, 8, 2)
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    cache = HostCache(8 << 20, st_, c)
+    eng = SSOEngine(spec, plan, dims, st_, cache, c,
+                    pipeline=PipelineConfig(depth=1))
+    eng.initialize(Xr)
+    eng.forward(params)                 # warms the cache and the pool
+    u = plan.unit(plan.schedule[0])
+    cache.put(("grad", 1, u.p),
+              np.full((u.n_dst, dims[1]), 2.0, np.float32))
+    # poison pooled buffers of the exact shapes the fetch paths will reuse
+    for shape in [(u.d_pad, dims[1]), (u.r_pad, dims[0])]:
+        junk = eng._rt.pool.acquire(shape, np.float32)
+        junk[:] = np.nan
+        eng._rt.pool.release(junk)
+    out = eng._grad_fetch(1, u.p)
+    np.testing.assert_array_equal(out[: u.n_dst], 2.0)
+    assert np.all(out[u.n_dst:] == 0)   # padded tail rezeroed, no NaN leak
+    ga = eng._gather(0, u, u.r_pad)
+    assert np.all(np.isfinite(ga))
+    assert np.all(ga[u.n_req:] == 0)
+    eng.close()
+    st_.close()
 
 
 # ------------------------------------------------------- run_stream harness

@@ -133,3 +133,130 @@ class TestCostModel:
         for alpha, lo, hi in [(2.0, 1.1, 1.3), (8.0, 1.5, 1.7)]:
             thresh = 2 * (alpha + 1) / (alpha + 3)
             assert lo < thresh < hi
+
+
+class TestSpillQueue:
+    """Satellite: dirty-eviction flushes route through the write-behind
+    StorageIOQueue so an eviction never stalls cache users on a storage
+    write (the old path held the cache RLock for the whole write_rows)."""
+
+    class _SlowTier(StorageTier):
+        WRITE_S = 0.15
+
+        def write_rows(self, name, row0, arr):
+            import time
+            time.sleep(self.WRITE_S)
+            super().write_rows(name, row0, arr)
+
+    def _mk_slow(self, budget):
+        from repro.core.storage import StorageIOQueue
+        c = Counters()
+        st_ = self._SlowTier(tempfile.mkdtemp(), counters=c)
+        st_.alloc("back", (2048, 64), np.float32)
+        q = StorageIOQueue(st_, counters=c)
+        cache = HostCache(budget, st_, c)
+        cache.set_spill_queue(q)
+        return cache, st_, q, c
+
+    def test_spill_routes_through_queue_and_lands(self, rng):
+        import time
+        cache, st_, q, c = self._mk_slow(1 << 17)  # room for one 128KB entry
+        buf = rng.standard_normal((512, 64)).astype(np.float32)
+        assert cache.put(("grad", 0, 0), buf, dirty=True,
+                         spill_name="back", spill_row0=0)
+        t0 = time.perf_counter()
+        # evicts the dirty entry; the flush must be a queue submit, not a
+        # synchronous slow write under the lock
+        cache.get(("act", 1, 0), loader=lambda: buf.copy())
+        assert time.perf_counter() - t0 < self._SlowTier.WRITE_S
+        assert not cache.contains(("grad", 0, 0))
+        q.drain()
+        np.testing.assert_array_equal(st_.read_rows("back", 0, 512), buf)
+        q.close()
+        st_.close()
+
+    def test_eviction_does_not_block_concurrent_cache_users(self, rng):
+        import threading
+        import time
+        cache, st_, q, c = self._mk_slow(1 << 17)
+        buf = rng.standard_normal((512, 64)).astype(np.float32)
+        cache.put(("grad", 0, 0), buf, dirty=True,
+                  spill_name="back", spill_row0=0)
+        cache.put(("probe", 9, 9), np.zeros((4, 4), np.float32))
+        # worker evicts the dirty entry (queue submit under the lock)...
+        t = threading.Thread(
+            target=lambda: cache.get(("act", 1, 0), loader=lambda: buf.copy())
+        )
+        t.start()
+        time.sleep(0.01)
+        # ...while the main thread's peek must not stall for the write
+        t0 = time.perf_counter()
+        cache.peek(("probe", 9, 9))
+        assert time.perf_counter() - t0 < self._SlowTier.WRITE_S / 2
+        t.join(timeout=5)
+        q.drain()
+        q.close()
+        st_.close()
+
+    def test_reader_through_queue_sees_spilled_data(self, rng):
+        """FIFO ordering: a read submitted after the eviction's spill write
+        observes the spilled data (what the engine's grad/snap reads rely
+        on)."""
+        cache, st_, q, c = self._mk_slow(1 << 17)
+        buf = rng.standard_normal((512, 64)).astype(np.float32)
+        cache.put(("grad", 0, 0), buf, dirty=True,
+                  spill_name="back", spill_row0=0)
+        cache.get(("act", 1, 0), loader=lambda: buf.copy())  # evicts + spills
+        got = q.submit_read("back", 0, 512).result(timeout=10)
+        np.testing.assert_array_equal(got, buf)
+        q.close()
+        st_.close()
+
+    def test_dirty_replacement_spills_through_queue(self, rng):
+        cache, st_, q, c = self._mk_slow(1 << 20)
+        a = rng.standard_normal((64, 64)).astype(np.float32)
+        cache.put(("grad", 0, 0), a, dirty=True, spill_name="back")
+        cache.put(("grad", 0, 0), np.zeros((64, 64), np.float32))
+        q.drain()
+        np.testing.assert_array_equal(st_.read_rows("back", 0, 64), a)
+        q.close()
+        st_.close()
+
+    def test_without_queue_flush_stays_synchronous(self, rng):
+        """No spill queue wired: the old synchronous flush ordering holds
+        (eviction returns only after the data is on storage)."""
+        c = Counters()
+        st_ = self._SlowTier(tempfile.mkdtemp(), counters=c)
+        st_.alloc("back", (2048, 64), np.float32)
+        cache = HostCache(1 << 17, st_, c)
+        buf = rng.standard_normal((512, 64)).astype(np.float32)
+        cache.put(("grad", 0, 0), buf, dirty=True,
+                  spill_name="back", spill_row0=0)
+        cache.get(("act", 1, 0), loader=lambda: buf.copy())
+        np.testing.assert_array_equal(st_.read_rows("back", 0, 512), buf)
+        st_.close()
+
+    def test_spill_skips_write_backpressure(self, rng):
+        """An eviction spill must not block on the queue's byte
+        backpressure either — it runs under the cache RLock."""
+        import time
+        from repro.core.storage import StorageIOQueue
+        c = Counters()
+        st_ = self._SlowTier(tempfile.mkdtemp(), counters=c)
+        st_.alloc("back", (2048, 64), np.float32)
+        buf = rng.standard_normal((512, 64)).astype(np.float32)  # 128KB
+        # cap below one buffer: regular writers would block until drained
+        q = StorageIOQueue(st_, max_inflight_bytes=buf.nbytes // 2,
+                           counters=c)
+        cache = HostCache(1 << 17, st_, c)
+        cache.set_spill_queue(q)
+        q.submit_write("back", 1024, buf.copy(), wait=False)  # saturate
+        cache.put(("grad", 0, 0), buf, dirty=True,
+                  spill_name="back", spill_row0=0)
+        t0 = time.perf_counter()
+        cache.get(("act", 1, 0), loader=lambda: buf.copy())  # evict + spill
+        assert time.perf_counter() - t0 < self._SlowTier.WRITE_S
+        q.drain()
+        np.testing.assert_array_equal(st_.read_rows("back", 0, 512), buf)
+        q.close()
+        st_.close()

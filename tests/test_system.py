@@ -99,6 +99,7 @@ def test_io_counters_match_analytic_model():
     assert c.storage_write_bytes >= D
 
 
+@pytest.mark.slow
 def test_modeled_time_orders_engines():
     """Under the paper's tier bandwidths the regather engine's modeled epoch
     time beats the snapshot engine when host memory is tight (Table 3
