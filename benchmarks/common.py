@@ -11,7 +11,7 @@ import numpy as np
 from repro.core import (
     Counters, HostCache, SSOEngine, StorageTier, build_plan, modeled_time,
 )
-from repro.core.costmodel import PAPER_WORKSTATION
+from repro.core.costmodel import PAPER_WORKSTATION, gnn_epoch_flops
 from repro.graph import (
     gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
 )
@@ -127,7 +127,9 @@ def run_engine_epoch(
         loss, _ = eng.run_epoch(wl["params"], wl["Y"])
         walls.append(time.perf_counter() - t0)
     wall = sum(walls) / len(walls)
-    mt = modeled_time(c, PAPER_WORKSTATION)
+    # real vertex+edge FLOPs so the modeled t_compute term is non-zero
+    flops = gnn_epoch_flops(wl["g"].n_nodes, wl["g"].n_edges, wl["dims"])
+    mt = modeled_time(c, PAPER_WORKSTATION, flops=flops)
     eng.close()
     st_.close()
     if per_epoch_walls:

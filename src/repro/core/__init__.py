@@ -6,6 +6,7 @@ from repro.core.plan import PartitionPlan, WorkUnit, build_plan
 from repro.core.engine import SSOEngine
 from repro.core.costmodel import (
     TierBandwidths, PAPER_WORKSTATION, modeled_time, ModeledTime,
+    gnn_epoch_flops,
 )
 from repro.core.microbatch import microbatch_grads, build_full_mfg
 
@@ -13,5 +14,6 @@ __all__ = [
     "Counters", "PhaseTimer", "StorageTier", "StorageIOQueue", "HostCache",
     "PartitionPlan", "WorkUnit", "build_plan", "SSOEngine",
     "TierBandwidths", "PAPER_WORKSTATION", "modeled_time", "ModeledTime",
+    "gnn_epoch_flops",
     "microbatch_grads", "build_full_mfg",
 ]

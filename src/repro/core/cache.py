@@ -13,6 +13,17 @@ hierarchy:
 Dirty entries (gradient write-back buffers — the paper's "host memory as a
 write-back buffer", §3) are flushed to the storage tier on eviction.
 
+Budget discipline: callers that materialize a block *for* the cache (the
+engine's snapshot/grad write-back buffers, the prefetch stage's batched
+loads, the gather's miss loads) claim the space FIRST via
+:meth:`HostCache.reserve` / ``prefetch_many(..., sizes=...)`` /
+``get(..., size_hint=...)`` — evictions run before the allocation and the
+claim counts toward the budget, so host memory never transiently exceeds
+``budget_bytes`` on any engine path; :attr:`HostCache.peak_bytes` records
+the high-water mark the regression tests pin against the budget. (Bare
+``get``/``prefetch`` calls without a size keep the legacy
+materialize-then-insert order and may overshoot by one block.)
+
 Concurrency: the pipeline runtime (repro/runtime/) reads through this cache
 from prefetch/gather worker threads while the main loop scatter-accumulates
 into dirty entries. Pins are therefore *counted* (an entry may be held by
@@ -70,6 +81,8 @@ class HostCache:
         self.counters = counters or storage.counters
         self._entries: Dict[Key, _Entry] = {}
         self._bytes = 0
+        self._reserved = 0   # bytes reserved ahead of materialization
+        self._peak = 0       # high-water mark of _bytes (incl. reservations)
         self._tick = 0
         self._lock = threading.RLock()
         self._spill_queue = None   # Optional[StorageIOQueue]
@@ -80,6 +93,14 @@ class HostCache:
         queue's lifetime and must drain it before freeing/reading spill
         targets outside the queue's FIFO."""
         self._spill_queue = queue
+
+    @property
+    def spill_queue(self):
+        """The wired spill queue, or ``None``. A second engine sharing this
+        cache must NOT replace an existing queue — spill writes and the
+        owner's reads would land on different FIFOs, breaking the
+        read-behind-spill ordering."""
+        return self._spill_queue
 
     # -- internals ----------------------------------------------------------
     def _touch(self, e: _Entry) -> None:
@@ -147,23 +168,69 @@ class HostCache:
     def _insert(self, key: Key, e: _Entry) -> None:
         self._entries[key] = e
         self._bytes += e.arr.nbytes
+        self._peak = max(self._peak, self._bytes)
+
+    # -- reservations --------------------------------------------------------
+    def reserve(self, nbytes: int) -> bool:
+        """Claim ``nbytes`` of budget BEFORE materializing the block that
+        will occupy it: evictions happen now, and the claimed bytes count
+        toward the budget so no concurrent insert can overshoot it. Pair
+        with ``put(..., reserved_bytes=nbytes)`` to consume the claim, or
+        :meth:`unreserve` to abandon it (e.g. the load failed). Returns
+        False when the budget cannot cover the claim even after eviction —
+        the caller should fall back to its uncached path without loading."""
+        nbytes = int(nbytes)
+        with self._lock:
+            if not self._make_room(nbytes):
+                return False
+            self._reserved += nbytes
+            self._bytes += nbytes
+            self._peak = max(self._peak, self._bytes)
+            self.counters.sample_memory(self._bytes)
+            return True
+
+    def unreserve(self, nbytes: int) -> None:
+        """Release a claim taken with :meth:`reserve` (caller must pass the
+        same byte count)."""
+        nbytes = int(nbytes)
+        with self._lock:
+            self._reserved -= nbytes
+            self._bytes -= nbytes
 
     # -- API ----------------------------------------------------------------
     @property
     def used_bytes(self) -> int:
+        """Bytes counted against the budget: resident entries plus
+        outstanding reservations."""
         return self._bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        """High-water mark of :attr:`used_bytes` — with the reserve-first
+        protocol this never exceeds ``budget`` (the regression the
+        transient-overshoot fix pins down)."""
+        return self._peak
 
     def get(
         self,
         key: Key,
         loader: Callable[[], np.ndarray],
+        size_hint: Optional[int] = None,
     ) -> np.ndarray:
         """Fetch a partition block, loading through the cache on miss.
 
         If the block cannot fit even after eviction, it streams through
         uncached (counted as bypass). The loader runs OUTSIDE the lock, so a
         pipeline worker's storage read never blocks main-loop cache traffic;
-        a racing load of the same key keeps whichever copy landed first."""
+        a racing load of the same key keeps whichever copy landed first.
+
+        With ``size_hint`` (the block's nbytes, knowable from the plan
+        before the read) the miss path follows the reserve-first protocol:
+        budget is claimed — and evictions run — BEFORE the loader
+        materializes the block, so host memory never transiently exceeds
+        the budget; an unfittable block streams through without an insert
+        attempt. Without the hint the legacy materialize-then-insert order
+        applies (one block of transient overshoot)."""
         with self._lock:
             e = self._entries.get(key)
             if e is not None:
@@ -171,13 +238,22 @@ class HostCache:
                 self._touch(e)
                 return e.arr
             self.counters.bump("cache_misses")
-        arr = loader()
+        reserved = size_hint is not None and self.reserve(size_hint)
+        try:
+            arr = loader()
+        except BaseException:
+            if reserved:
+                self.unreserve(size_hint)
+            raise
         with self._lock:
+            if reserved:
+                self._reserved -= int(size_hint)
+                self._bytes -= int(size_hint)
             e = self._entries.get(key)
             if e is not None:  # racing loader won; use the resident copy
                 self._touch(e)
                 return e.arr
-            if self._make_room(arr.nbytes):
+            if (size_hint is None or reserved) and self._make_room(arr.nbytes):
                 self._tick += 1
                 self._insert(key, _Entry(arr, self._tick))
             else:
@@ -190,33 +266,44 @@ class HostCache:
         key: Key,
         loader: Callable[[], np.ndarray],
         pin: bool = False,
+        size_hint: Optional[int] = None,
     ) -> bool:
         """Stage-1 of the pipeline: ensure ``key`` is resident (loading it if
         needed) without returning the data. With ``pin=True`` the entry's pin
         count is raised so it stays resident until the consuming gather calls
         :meth:`unpin`. Returns False when the entry could not be kept
         resident (budget too tight) — the later ``get`` will reload.
-        Single-key form of :meth:`prefetch_many`."""
-        return self.prefetch_many([key], lambda _ks: [loader()], pin=pin)[key]
+        ``size_hint`` engages the reserve-first protocol (see
+        :meth:`prefetch_many`'s ``sizes``). Single-key form of
+        :meth:`prefetch_many`."""
+        sizes = {key: int(size_hint)} if size_hint is not None else None
+        return self.prefetch_many(
+            [key], lambda _ks: [loader()], pin=pin, sizes=sizes
+        )[key]
 
     def prefetch_many(
         self,
         keys,
         batch_loader: Callable[[list], list],
         pin: bool = False,
+        sizes: Optional[Dict[Key, int]] = None,
     ) -> Dict[Key, bool]:
         """Batched stage-1 prefetch: ensure every key is resident, loading
-        ALL the missing ones with a single ``batch_loader(missing_keys)``
-        call (the engine backs this with a vectored storage read — one
+        the missing ones with a single ``batch_loader(missing_keys)`` call
+        (the engine backs this with a vectored storage read — one
         submission per work unit instead of one per partition). Pin
         semantics match :meth:`prefetch`. Returns ``{key: resident}``;
         a key is pinned iff it is resident and ``pin`` is set.
 
-        Trade-off: the whole missing working set is materialized at once
-        before insertion, so transient host memory can overshoot the budget
-        by up to one unit's missing blocks (blocks that don't fit are
-        dropped as bypass afterwards) — that is the price of paying the
-        storage per-op latency once per unit instead of once per block."""
+        With ``sizes`` (``{key: nbytes}`` for every key), budget is
+        **reserved before the load**: evictions run up front, keys that
+        cannot fit are reported non-resident (and counted as bypass)
+        WITHOUT being read, and host memory never transiently exceeds
+        ``budget_bytes`` — the later ``get`` streams the dropped keys
+        uncached. Without ``sizes`` the legacy behavior applies: the whole
+        missing working set is materialized before insertion, so transient
+        host memory can overshoot the budget by up to one unit's missing
+        blocks."""
         out: Dict[Key, bool] = {}
         missing = []
         with self._lock:
@@ -230,11 +317,39 @@ class HostCache:
                     out[key] = True
                 else:
                     missing.append(key)
+            reserved: Dict[Key, int] = {}
+            if sizes is not None:
+                admitted = []
+                for key in missing:
+                    nb = int(sizes[key])
+                    if self._make_room(nb):
+                        self._reserved += nb
+                        self._bytes += nb
+                        self._peak = max(self._peak, self._bytes)
+                        reserved[key] = nb
+                        admitted.append(key)
+                    else:
+                        # cannot hold it: skip the read entirely — the
+                        # consuming get() streams it through uncached
+                        self.counters.bump("cache_bypass")
+                        out[key] = False
+                missing = admitted
+                self.counters.sample_memory(self._bytes)
         if not missing:
             return out
-        arrs = batch_loader(missing)
+        try:
+            arrs = batch_loader(missing)
+        except BaseException:
+            with self._lock:
+                for nb in reserved.values():
+                    self._reserved -= nb
+                    self._bytes -= nb
+            raise
         with self._lock:
             for key, arr in zip(missing, arrs):
+                nb = reserved.pop(key, 0)
+                self._reserved -= nb
+                self._bytes -= nb
                 e = self._entries.get(key)
                 if e is not None:  # racing loader won; keep resident copy
                     self._touch(e)
@@ -242,6 +357,8 @@ class HostCache:
                         e.pinned += 1
                     out[key] = True
                     continue
+                # with a reservation this always fits (the claim kept the
+                # space); without sizes it may evict or fall through
                 if self._make_room(arr.nbytes):
                     self._tick += 1
                     self._insert(
@@ -251,6 +368,9 @@ class HostCache:
                 else:
                     self.counters.bump("cache_bypass")
                     out[key] = False
+            for nb in reserved.values():  # loader returned fewer arrays
+                self._reserved -= nb
+                self._bytes -= nb
             self.counters.sample_memory(self._bytes)
         return out
 
@@ -262,13 +382,23 @@ class HostCache:
         pinned: bool = False,
         spill_name: Optional[str] = None,
         spill_row0: int = 0,
+        reserved_bytes: int = 0,
     ) -> bool:
         """Insert (e.g. gradient write-back buffer). Returns False if the
         entry could not be cached (caller must handle, e.g. direct storage).
 
+        ``reserved_bytes`` consumes a prior :meth:`reserve` claim atomically
+        with the insert (the reserve-then-materialize protocol: the claim
+        held the space, so host memory never exceeded the budget while the
+        caller built ``arr``). The claim is released here whether or not
+        the insert succeeds.
+
         Replacing an existing DIRTY entry first flushes it to its spill
         target — silently dropping it would lose unflushed gradient data."""
         with self._lock:
+            if reserved_bytes:
+                self._reserved -= int(reserved_bytes)
+                self._bytes -= int(reserved_bytes)
             old = self._entries.get(key)
             if old is not None:
                 if old.dirty and old.spill_name is not None \

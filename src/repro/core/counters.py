@@ -30,6 +30,9 @@ class Counters:
     storage_write_paged_bytes: int = 0
     storage_read_ops: int = 0
     storage_write_ops: int = 0
+    # peak bytes simultaneously allocated on the storage tier (activation /
+    # grad / snapshot files) — inference's per-layer truncation halves this
+    storage_peak_alloc_bytes: int = 0
     # host <-> device (the paper's PCIe path; TPU host link here)
     h2d_bytes: int = 0
     d2h_bytes: int = 0
@@ -82,6 +85,12 @@ class Counters:
         with self._lock:
             self.cache_peak_bytes = max(self.cache_peak_bytes, cache_bytes)
             self._mem_timeline.append((time.perf_counter(), cache_bytes))
+
+    def sample_storage_alloc(self, alloc_bytes: int) -> None:
+        with self._lock:
+            self.storage_peak_alloc_bytes = max(
+                self.storage_peak_alloc_bytes, alloc_bytes
+            )
 
     @property
     def memory_timeline(self):

@@ -15,6 +15,13 @@ Both engines drive the same pure layer functions (models/gnn/layers.py), so
 gradient equality against whole-graph ``jax.grad`` is exact up to float
 reassociation — the paper's "no algorithm change" property (Appendix W).
 
+The forward pass is delegated to the composable
+:class:`repro.runtime.forward.ForwardRunner` — the same streamed
+gather→transfer→compute→bypass layer pass that powers storage-offloaded
+inference (``repro.infer``); training hooks its snapshot persist into the
+runner's ``after_compute`` and the backward's regather reuses the runner's
+gather/prefetch (same cache keys, same pin protocol).
+
 Execution is delegated to the async pipeline runtime (repro/runtime/): each
 layer pass — forward, loss, and backward — streams its work units through
 prefetch → gather → device-transfer worker stages while the main thread
@@ -37,7 +44,7 @@ gathered buffer are unchanged; device copies are exact).
 from __future__ import annotations
 
 from functools import partial
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Union
+from typing import TYPE_CHECKING, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +110,7 @@ class SSOEngine:
         # lazy import: repro.runtime depends on repro.core submodules
         from repro.runtime.config import PipelineConfig
         from repro.runtime.executor import PipelineExecutor
+        from repro.runtime.forward import ForwardRunner
 
         assert mode in ("regather", "snapshot")
         self.spec = spec
@@ -115,10 +123,6 @@ class SSOEngine:
         self.mode = mode
         self.dtype = np.dtype(dtype)
         self._materialized_grads: set = set()
-        # (layer, p) -> keys the prefetch stage actually pinned for that
-        # unit; the gather stage pops and releases exactly these (prefetch
-        # of a unit strictly precedes its gather via the stage queues)
-        self._prefetch_pins: Dict = {}
         if pipeline is None:
             # legacy knob: overlap=True was a single-worker next-unit
             # prefetch — depth-1 pipelining subsumes it
@@ -137,22 +141,17 @@ class SSOEngine:
             # an eviction never stalls pipeline workers on a storage write;
             # grad/snap reads below go through the same FIFO for ordering
             cache.set_spill_queue(self._rt.writer)
-        self._jit_fwd = {}
+        # the shared forward layer pass (also the backward's regather path);
+        # snapshot-mode backward pins live in the runner's pin table too
+        self.fwd_runner = ForwardRunner(
+            spec, plan, self.dims, storage, cache, self.counters, self._rt,
+            pipeline, dtype=self.dtype,
+        )
+        self._prefetch_pins = self.fwd_runner.prefetch_pins
         self._jit_bwd = {}
         self._jit_loss = None
 
     # ------------------------------------------------------------------ jit
-    def _fwd(self, activate: bool):
-        if activate not in self._jit_fwd:
-            apply = self.spec.apply_layer
-
-            @jax.jit
-            def f(params_l, ga, topo):
-                return apply(params_l, ga, topo, activate=activate)
-
-            self._jit_fwd[activate] = f
-        return self._jit_fwd[activate]
-
     def _bwd(self, activate: bool):
         if activate not in self._jit_bwd:
             apply = self.spec.apply_layer
@@ -214,175 +213,53 @@ class SSOEngine:
                     st.alloc(name, (u.n_req, self.dims[l]), self.dtype)
 
     # --------------------------------------------------------------- gather
-    def _load_part_block(self, layer: int, q: int) -> np.ndarray:
-        a0, a1 = self.plan.ro.partition_slice(q)
-        return self.storage.read_rows(_act_name(layer), a0, a1)
-
+    # The gather/prefetch/transfer machinery lives in the shared
+    # ForwardRunner; the backward's regather path drives it through these
+    # delegates (same cache keys and pin protocol as the forward).
     def _gather(self, layer: int, u: WorkUnit, pad_rows: int) -> np.ndarray:
-        """Assemble GA_p^{layer} from the partition cache (paper's host-side
-        gather: one sequential run per source partition). The output buffer
-        comes from the runtime pool — the caller returns it via
-        ``self._rt.pool.release`` once the device has consumed it."""
-        d = self.dims[layer]
-        buf = self._rt.pool.acquire((pad_rows, d), self.dtype)
-        buf[u.n_req :] = 0  # rows [0, n_req) are fully overwritten below
-        ptr = u.req_part_ptr
-        for q in u.req_parts:
-            block = self.cache.get(
-                ("act", layer, int(q)),
-                loader=partial(self._load_part_block, layer, int(q)),
-            )
-            a0, _ = self.plan.ro.partition_slice(int(q))
-            rows = u.req_global[ptr[q] : ptr[q + 1]] - a0
-            # np.take releases the GIL for numeric dtypes (unlike advanced
-            # indexing), letting worker-thread gathers overlap jit dispatch;
-            # mode="clip" skips the bounds-check path (rows are plan-valid)
-            np.take(block, rows, axis=0, out=buf[ptr[q] : ptr[q + 1]],
-                    mode="clip")
-        # release exactly the pins the prefetch stage took for THIS unit
-        # (none in serial mode or when a prefetch couldn't keep residency)
-        for key in self._prefetch_pins.pop((layer, u.p), ()):
-            self.cache.unpin(key)
-        # bump(): gathers may run on several pipeline workers concurrently
-        self.counters.bump(
-            "host_gather_bytes", u.n_req * d * self.dtype.itemsize
-        )
-        return buf
+        return self.fwd_runner.gather(layer, u, pad_rows)
 
     def _gather_padded(self, layer: int, u: WorkUnit, phase: str) -> np.ndarray:
-        with PhaseTimer(self.counters, phase):
-            return self._gather(layer, u, u.r_pad)
+        return self.fwd_runner.gather_padded(layer, u, phase)
 
     def _prefetch_unit(self, layer: int, u: WorkUnit) -> None:
-        """Stage-1: make (and keep) the unit's source partitions resident.
-        With ``batched_reads`` every missing partition is fetched in ONE
-        vectored storage submission instead of one read per partition."""
-        pin = self.pipeline.pin_prefetched
-        keys = [("act", layer, int(q)) for q in u.req_parts]
-        if self.pipeline.batched_reads:
-            name = _act_name(layer)
+        self.fwd_runner.prefetch_unit(layer, u)
 
-            def batch_loader(missing):
-                reqs = []
-                for (_, _, q) in missing:
-                    a0, a1 = self.plan.ro.partition_slice(q)
-                    reqs.append((name, a0, a1))
-                return self.storage.read_rows_batched(reqs)
-
-            res = self.cache.prefetch_many(keys, batch_loader, pin=pin)
-            pinned = [k for k in keys if res.get(k)] if pin else []
-        else:
-            pinned = []
-            for key in keys:
-                resident = self.cache.prefetch(
-                    key,
-                    loader=partial(self._load_part_block, layer, key[2]),
-                    pin=pin,
-                )
-                if pin and resident:
-                    pinned.append(key)
-        if pinned:
-            self._prefetch_pins[(layer, u.p)] = pinned
-
-    # ----------------------------------------------------- transfer staging
-    @staticmethod
-    def _h2d(arr: np.ndarray):
-        """Stage a host array onto the device with a GUARANTEED copy.
-        ``jax.device_put`` zero-copies 64-byte-aligned host buffers on the
-        CPU backend, which would let a staged device array alias a recycled
-        pool buffer; ``jnp.array(copy=True)`` always materializes an
-        independent device buffer (and on an accelerator is the same H2D
-        DMA either way). Blocks until the copy lands so the caller may
-        recycle ``arr`` immediately."""
-        dev = jnp.array(arr, copy=True)
-        dev.block_until_ready()
-        return dev
-
-    def _fwd_transfer(self, u: WorkUnit, ga: np.ndarray, _aux):
-        """H2D staging for one forward unit (runs on the transfer thread):
-        copy the gathered buffer onto the device while the previous unit's
-        kernel runs, then recycle the host buffer — snapshot mode keeps it
-        alive for the snapshot put on the compute loop."""
-        dev = self._h2d(ga)
-        self.counters.bump("h2d_bytes", ga.nbytes)
-        if self.mode == "snapshot":
-            return (dev, ga), None
-        self._rt.pool.release(ga)
-        return (dev, None), None
+    def _h2d(self, arr: np.ndarray):
+        return self.fwd_runner.h2d(arr)
 
     # -------------------------------------------------------------- forward
     def forward(self, params: List) -> None:
-        sched = self.plan.schedule
-        rt = self._rt
-        use_xfer = self._use_xfer
         for l in range(self.n_layers):
-            fwd = self._fwd(activate=(l < self.n_layers - 1))
-            units = [self.plan.unit(p) for p in sched]
-            gather_fn = lambda u, _l=l: self._gather_padded(_l, u, "gather")
-            prefetch_fn = (
-                (lambda u, _l=l: self._prefetch_unit(_l, u))
-                if self.pipeline.enabled else None
-            )
-            for u, ga, _ in rt.run_stream(
-                units, gather_fn, prefetch_fn,
-                transfer_fn=self._fwd_transfer if use_xfer else None,
-                wait_stage="compute_wait_fwd",
-                xfer_wait_stage="compute_wait_xfer_fwd",
-                xfer_up_stage="xfer_wait_up_fwd",
-            ):
-                with PhaseTimer(self.counters, "compute_fwd"):
-                    if use_xfer:
-                        ga_dev, ga_host = ga
-                    else:
-                        ga_host = ga
-                        ga_dev = jnp.asarray(ga)
-                        self.counters.bump("h2d_bytes", ga.nbytes)
-                    out = fwd(params[l], ga_dev, u.topo)
-                    out_dst = out[: u.n_dst]
-                    if use_xfer and self.pipeline.async_d2h:
-                        # start the D2H copy now; the retire thread runs the
-                        # deferred np.asarray + bypass write
-                        out_dst.copy_to_host_async()
-                        out_np = None
-                    else:
-                        out_np = np.asarray(out_dst)
-                        self.counters.bump("d2h_bytes", out_np.nbytes)
-                if self.mode == "snapshot":
+            after = None
+            if self.mode == "snapshot":
+                def after(u, ga_host, _l=l):
                     # HongTu: persist GA for the backward pass (α-amplified).
-                    # The snapshot is offloaded from the device, so it transits
-                    # the device<->host link (paper Table 6: (2α+1)D forward).
+                    # The snapshot is offloaded from the device, so it
+                    # transits the device<->host link (paper Table 6:
+                    # (2α+1)D forward).
                     self.counters.bump(
                         "d2h_bytes",
-                        u.n_req * self.dims[l] * self.dtype.itemsize,
+                        u.n_req * self.dims[_l] * self.dtype.itemsize,
                     )
-                    self._snapshot_put(l, u.p, ga_host[: u.n_req])
-                if ga_host is not None and (
-                    not use_xfer or self.mode == "snapshot"
-                ):
-                    # regather+transfer recycled the host buffer on the
-                    # transfer thread already
-                    rt.pool.release(ga_host)
-                with PhaseTimer(self.counters, "bypass_write"):
-                    # bypass: output activations go straight to storage
-                    # (write-behind when pipelined; out_np is freshly owned)
-                    if out_np is None:
-                        rt.retire_write(_act_name(l + 1), u.v0, out_dst)
-                    else:
-                        rt.write_rows(_act_name(l + 1), u.v0, out_np)
-            # barrier: layer l+1 reads act{l+1} — all writes must be down
-            # (drain_writes retires pending D2H copies first)
-            rt.drain_writes()
-            # act{l+1} was just rewritten: cached blocks of it (loaded by a
-            # previous epoch's gathers) are stale — drop before any reader
-            self.cache.drop_layer("act", l + 1, flush=False)
+                    self._snapshot_put(_l, u.p, ga_host[: u.n_req])
+            self.fwd_runner.run_layer(
+                l, params[l], activate=(l < self.n_layers - 1),
+                after_compute=after,
+            )
 
     # ------------------------------------------------------------ snapshots
     def _snapshot_put(self, layer: int, p: int, ga_real: np.ndarray) -> None:
         name = _snap_name(layer, p)
-        # copy: ga_real views a pooled gather buffer that will be recycled
+        # reserve BEFORE the copy (ga_real views a pooled gather buffer that
+        # will be recycled): evictions run first and the claim counts toward
+        # the budget, so the snapshot copy never overshoots it transiently
+        nb = int(ga_real.nbytes)
+        reserved = self.cache.reserve(nb)
         snap = np.array(ga_real)
-        ok = self.cache.put(
-            ("snap", layer, p), snap, dirty=True, spill_name=name
+        ok = reserved and self.cache.put(
+            ("snap", layer, p), snap, dirty=True, spill_name=name,
+            reserved_bytes=nb,
         )
         if not ok:
             # write-behind when pipelined (snap is freshly owned); the
@@ -443,14 +320,23 @@ class SSOEngine:
         name = _grad_name(layer)
         buf = self.cache.acquire(key)
         if buf is None:
-            if ("gradmat", layer, q) in self._materialized_grads:
-                buf = self._io_read(name, a0, a1)
-            else:
-                buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
-                self._materialized_grads.add(("gradmat", layer, q))
-            ok = self.cache.put(
+            # reserve before materializing the write-back buffer so the
+            # zeros/read never pushes host memory past the cache budget
+            nb = (a1 - a0) * self.dims[layer] * self.dtype.itemsize
+            reserved = self.cache.reserve(nb)
+            try:
+                if ("gradmat", layer, q) in self._materialized_grads:
+                    buf = self._io_read(name, a0, a1)
+                else:
+                    buf = np.zeros((a1 - a0, self.dims[layer]), self.dtype)
+                    self._materialized_grads.add(("gradmat", layer, q))
+            except BaseException:
+                if reserved:
+                    self.cache.unreserve(nb)
+                raise
+            ok = reserved and self.cache.put(
                 key, buf, dirty=True, pinned=True,
-                spill_name=name, spill_row0=a0,
+                spill_name=name, spill_row0=a0, reserved_bytes=nb,
             )
             if not ok:
                 # degraded mode: read-modify-write on storage. The write

@@ -45,6 +45,7 @@ class StorageTier:
         self.counters = counters or Counters()
         self._arrays: Dict[str, np.memmap] = {}
         self._meta: Dict[str, Tuple[tuple, np.dtype]] = {}
+        self._alloc_bytes = 0
         self._lock = threading.Lock()
         os.makedirs(root, exist_ok=True)
 
@@ -56,8 +57,13 @@ class StorageTier:
         dtype = np.dtype(dtype)
         mm = np.memmap(self._path(name), dtype=dtype, mode="w+", shape=shape)
         with self._lock:
+            old = self._meta.get(name)
+            if old is not None:  # re-alloc without free: replace accounting
+                self._alloc_bytes -= int(np.prod(old[0])) * old[1].itemsize
             self._arrays[name] = mm
             self._meta[name] = (shape, dtype)
+            self._alloc_bytes += int(np.prod(shape)) * dtype.itemsize
+            self.counters.sample_storage_alloc(self._alloc_bytes)
 
     def exists(self, name: str) -> bool:
         return name in self._arrays
@@ -68,7 +74,8 @@ class StorageTier:
                 return
             mm = self._arrays.pop(name)
             del mm
-            self._meta.pop(name)
+            shape, dtype = self._meta.pop(name)
+            self._alloc_bytes -= int(np.prod(shape)) * dtype.itemsize
         try:
             os.remove(self._path(name))
         except OSError:
@@ -77,10 +84,21 @@ class StorageTier:
     def shape(self, name: str) -> tuple:
         return self._meta[name][0]
 
+    def dtype(self, name: str) -> np.dtype:
+        return self._meta[name][1]
+
+    @property
+    def allocated_bytes(self) -> int:
+        """Bytes currently allocated across all files — inference's
+        per-layer truncation shows up as a lower peak of this (tracked in
+        ``Counters.storage_peak_alloc_bytes``) than the training forward."""
+        return self._alloc_bytes
+
     def close(self) -> None:
         with self._lock:
             self._arrays.clear()
             self._meta.clear()
+            self._alloc_bytes = 0
         shutil.rmtree(self.root, ignore_errors=True)
 
     # -- I/O ----------------------------------------------------------------

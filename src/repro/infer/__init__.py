@@ -1,0 +1,16 @@
+"""Storage-offloaded inference + embedding serving — the second workload on
+the SSO substrate (see ISSUE/ROADMAP north star: training produces the
+model, this package produces and serves the embeddings).
+
+- :class:`OffloadedInference`: layer-wise full-graph forward through the
+  shared :class:`~repro.runtime.forward.ForwardRunner` pipeline, with
+  per-layer storage truncation and optional fp16 on-storage activations.
+- :class:`EmbeddingServer`: batched original-id lookups against the final
+  embedding table through a dedicated host cache, with hit/miss and
+  latency-percentile telemetry.
+"""
+from repro.infer.engine import OffloadedInference
+from repro.infer.server import EmbeddingServer
+from repro.infer.traffic import zipf_batches
+
+__all__ = ["OffloadedInference", "EmbeddingServer", "zipf_batches"]

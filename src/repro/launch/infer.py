@@ -1,0 +1,155 @@
+"""Inference launcher: ``python -m repro.launch.infer --arch <id> [...]``.
+
+The serving-side sibling of ``repro.launch.train --offload``: runs
+storage-offloaded layer-wise inference (repro/infer/) for a GNN arch on a
+small synthetic graph, checks the pipelined engine against the serial one
+(bit-identical embedding table) and the served lookups against a dense
+whole-graph forward, then reports the EmbeddingServer's hit/latency stats.
+
+Exit status 0 iff every check passes — CI uses this as the inference smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _infer_smoke(
+    model: str,
+    depth: int,
+    cache_mb: int = 4,
+    serve_cache_kb: int = 256,
+    queries: int = 8,
+    batch: int = 64,
+    fp16: bool = False,
+    gather_workers: int = 1,
+) -> dict:
+    """Drive OffloadedInference (serial + pipelined) and the
+    EmbeddingServer for a GNN arch; returns the check/stat dict."""
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.core import Counters, HostCache, StorageTier, build_plan
+    from repro.graph import (
+        gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
+    )
+    from repro.graph.csr import add_self_loops
+    from repro.graph.synthetic import random_features
+    from repro.infer import EmbeddingServer, OffloadedInference
+    from repro.models.gnn.layers import (
+        full_graph_forward, full_graph_topo, get_gnn,
+    )
+    from repro.runtime import PipelineConfig
+
+    g = add_self_loops(kronecker_graph(2000, 7, seed=0))
+    n_parts = 6
+    res = switching_aware_partition(g, n_parts, max_iters=8, seed=0)
+    plan = build_plan(g, res.parts, n_parts, edge_weight=gcn_norm_coeffs(g))
+    dims = [24, 32, 8]
+    spec = get_gnn(model)
+    params = spec.init(jax.random.PRNGKey(0), 24, 32, 8, 2)
+    X = random_features(g.n_nodes, 24, 0)[plan.ro.perm]
+    store_dtype = np.float16 if fp16 else None
+
+    tables = {}
+    stats = {}
+    for d in sorted({0, depth}):
+        c = Counters()
+        st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+        cache = HostCache(cache_mb << 20, st_, c)
+        inf = OffloadedInference(
+            spec, plan, dims, st_, cache, c,
+            pipeline=PipelineConfig(depth=d, gather_workers=gather_workers),
+            store_dtype=store_dtype,
+        )
+        inf.initialize(X)
+        name = inf.run(params)
+        tables[d] = st_.read_rows(name, 0, g.n_nodes)
+        inf.close()
+        if d != depth:
+            st_.close()
+            continue
+        # serve the pipelined run's table and check against a dense forward
+        srv = EmbeddingServer(st_, name, plan.ro, serve_cache_kb << 10)
+        rg = plan.ro.graph
+        topo = full_graph_topo(
+            rg.indptr, rg.indices, rg.n_nodes, plan.edge_weight
+        )
+        ref = np.asarray(full_graph_forward(spec, params, X, topo))
+        rng = np.random.default_rng(0)
+        tol = 5e-2 if fp16 else 1e-3
+        serve_ok = True
+        for _ in range(queries):
+            ids = rng.integers(0, g.n_nodes, batch)
+            got = srv.lookup(ids).astype(np.float32)
+            want = ref[plan.ro.inv_perm[ids]]
+            if not np.allclose(got, want, rtol=tol, atol=tol):
+                serve_ok = False
+        stats = srv.stats()
+        stats["serve_matches_dense"] = serve_ok
+        srv.close()
+        st_.close()
+
+    pipeline_matches = bool(
+        np.array_equal(tables[0], tables[max(tables)])
+    )
+    finite = all(bool(np.all(np.isfinite(
+        t.astype(np.float32)))) for t in tables.values())
+    return dict(
+        finite=finite,
+        pipeline_matches_serial=pipeline_matches,
+        depth=depth,
+        fp16=fp16,
+        **stats,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="a GNN arch id (e.g. gcn-cora); the model family "
+                         "is recovered from the config naming convention")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="async pipeline lookahead (0 = serial engine)")
+    ap.add_argument("--gather-workers", type=int, default=1)
+    ap.add_argument("--cache-mb", type=int, default=4,
+                    help="host-cache budget for the inference engine")
+    ap.add_argument("--serve-cache-kb", type=int, default=256,
+                    help="dedicated host-cache budget for the "
+                         "EmbeddingServer")
+    ap.add_argument("--queries", type=int, default=8,
+                    help="lookup batches to issue against the server")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="node ids per lookup batch")
+    ap.add_argument("--fp16", action="store_true",
+                    help="store activations/embeddings in float16 on "
+                         "storage (compute stays float32)")
+    args = ap.parse_args()
+
+    from repro.configs import REGISTRY
+
+    arch = REGISTRY[args.arch]
+    if arch.family != "gnn":
+        print(f"{args.arch}: inference requires a GNN arch "
+              f"(family={arch.family})")
+        sys.exit(2)
+    model = args.arch.split("-")[0]
+    r = _infer_smoke(
+        model, args.pipeline_depth, cache_mb=args.cache_mb,
+        serve_cache_kb=args.serve_cache_kb, queries=args.queries,
+        batch=args.batch, fp16=args.fp16,
+        gather_workers=args.gather_workers,
+    )
+    print(f"{args.arch} infer smoke: {r}")
+    ok = (
+        r.get("finite")
+        and r.get("pipeline_matches_serial", True)
+        and r.get("serve_matches_dense", True)
+    )
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,11 +8,13 @@ from repro.runtime.config import PipelineConfig
 from repro.runtime.executor import (
     BufferPool, DeviceSlotPool, PipelineExecutor,
 )
+from repro.runtime.forward import ForwardRunner
 from repro.runtime.queues import (
     DONE, PipelineAbort, ReassemblyBuffer, StageQueue,
 )
 
 __all__ = [
     "PipelineConfig", "PipelineExecutor", "BufferPool", "DeviceSlotPool",
-    "StageQueue", "ReassemblyBuffer", "PipelineAbort", "DONE",
+    "ForwardRunner", "StageQueue", "ReassemblyBuffer", "PipelineAbort",
+    "DONE",
 ]

@@ -1,0 +1,298 @@
+"""Composable pipelined forward pass — the cache→gather→transfer→compute→
+bypass chain shared by training and inference.
+
+:class:`ForwardRunner` owns the forward half of the SSO workflow that used to
+live inside ``SSOEngine.forward``: partition-block loading through the
+:class:`~repro.core.cache.HostCache`, the host-side gather (one sequential
+run per source partition), the pipeline prefetch stage (vectored storage
+reads + counted cache pins), H2D staging on the runtime's transfer thread,
+the jitted layer apply, and the bypass write of the output activations —
+all streamed through :meth:`PipelineExecutor.run_stream` in strict schedule
+order, so a pipelined layer pass stays bit-identical to the serial one.
+
+Two drivers share it:
+
+- ``SSOEngine`` (training): runs every layer through :meth:`run_layer` and
+  hooks ``after_compute`` in snapshot mode to persist ``GA_p^{l-1}``; the
+  backward's regather reuses :meth:`gather_padded`/:meth:`prefetch_unit`
+  (same cache keys, same pin protocol).
+- ``OffloadedInference`` (serving): forward-only, so it adds the
+  inference-only wins on top — per-layer storage truncation (layer ``l-1``'s
+  activation file is freed as soon as layer ``l`` finishes) and optional
+  fp16 on-storage activations (``store_dtype``; gathers upcast to the
+  compute dtype, bypass writes downcast).
+
+``store_dtype`` controls what lives on storage (and therefore in the host
+cache, whose entries are raw storage blocks); compute always happens in
+``dtype``. With ``store_dtype == dtype`` the gather uses the GIL-releasing
+``np.take`` fast path and the byte flow is exactly the training engine's.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import HostCache
+from repro.core.counters import Counters, PhaseTimer
+from repro.core.plan import PartitionPlan, WorkUnit
+from repro.core.storage import StorageTier
+from repro.runtime.config import PipelineConfig
+
+
+def act_file(layer: int) -> str:
+    """Canonical per-layer activation file name (shared with the engine)."""
+    return f"act{layer}"
+
+
+class ForwardRunner:
+    def __init__(
+        self,
+        spec,
+        plan: PartitionPlan,
+        dims,
+        storage: StorageTier,
+        cache: HostCache,
+        counters: Counters,
+        rt,                       # PipelineExecutor (owned by the driver)
+        pipeline: PipelineConfig,
+        dtype=np.float32,
+        store_dtype=None,
+        act_kind: str = "act",
+        act_name: Callable[[int], str] = act_file,
+    ):
+        self.spec = spec
+        self.plan = plan
+        self.dims = list(dims)
+        self.storage = storage
+        self.cache = cache
+        self.counters = counters
+        self._rt = rt
+        self.pipeline = pipeline
+        self.dtype = np.dtype(dtype)
+        self.store_dtype = (
+            np.dtype(store_dtype) if store_dtype is not None else self.dtype
+        )
+        self.act_kind = act_kind
+        self.act_name = act_name
+        self._use_xfer = pipeline.enabled and pipeline.transfer_stage
+        # (layer, p) -> keys the prefetch stage actually pinned for that
+        # unit; the gather stage pops and releases exactly these (prefetch
+        # of a unit strictly precedes its gather via the stage queues)
+        self.prefetch_pins: Dict = {}
+        self._jit_fwd = {}
+
+    # ------------------------------------------------------------------ jit
+    def fwd_fn(self, activate: bool):
+        if activate not in self._jit_fwd:
+            apply = self.spec.apply_layer
+
+            @jax.jit
+            def f(params_l, ga, topo):
+                return apply(params_l, ga, topo, activate=activate)
+
+            self._jit_fwd[activate] = f
+        return self._jit_fwd[activate]
+
+    # --------------------------------------------------------------- gather
+    def load_part_block(self, layer: int, q: int) -> np.ndarray:
+        a0, a1 = self.plan.ro.partition_slice(q)
+        return self.storage.read_rows(self.act_name(layer), a0, a1)
+
+    def block_nbytes(self, layer: int, q: int) -> int:
+        """On-storage (= in-cache) size of partition q's block of layer
+        ``layer`` — what the prefetch stage reserves before loading."""
+        a0, a1 = self.plan.ro.partition_slice(q)
+        return (a1 - a0) * self.dims[layer] * self.store_dtype.itemsize
+
+    def gather(self, layer: int, u: WorkUnit, pad_rows: int) -> np.ndarray:
+        """Assemble GA_p^{layer} from the partition cache (paper's host-side
+        gather: one sequential run per source partition). The output buffer
+        comes from the runtime pool — the caller returns it via
+        ``rt.pool.release`` once the device has consumed it."""
+        d = self.dims[layer]
+        buf = self._rt.pool.acquire((pad_rows, d), self.dtype)
+        buf[u.n_req :] = 0  # rows [0, n_req) are fully overwritten below
+        ptr = u.req_part_ptr
+        for q in u.req_parts:
+            block = self.cache.get(
+                (self.act_kind, layer, int(q)),
+                loader=partial(self.load_part_block, layer, int(q)),
+                size_hint=self.block_nbytes(layer, int(q)),
+            )
+            a0, _ = self.plan.ro.partition_slice(int(q))
+            rows = u.req_global[ptr[q] : ptr[q + 1]] - a0
+            if block.dtype == buf.dtype:
+                # np.take releases the GIL for numeric dtypes (unlike
+                # advanced indexing), letting worker-thread gathers overlap
+                # jit dispatch; mode="clip" skips the bounds-check path
+                # (rows are plan-valid)
+                np.take(block, rows, axis=0, out=buf[ptr[q] : ptr[q + 1]],
+                        mode="clip")
+            else:
+                # reduced-precision storage: upcast into the compute buffer
+                buf[ptr[q] : ptr[q + 1]] = block[rows]
+        # release exactly the pins the prefetch stage took for THIS unit
+        # (none in serial mode or when a prefetch couldn't keep residency)
+        for key in self.prefetch_pins.pop((layer, u.p), ()):
+            self.cache.unpin(key)
+        # bump(): gathers may run on several pipeline workers concurrently
+        self.counters.bump(
+            "host_gather_bytes", u.n_req * d * self.dtype.itemsize
+        )
+        return buf
+
+    def gather_padded(self, layer: int, u: WorkUnit, phase: str) -> np.ndarray:
+        with PhaseTimer(self.counters, phase):
+            return self.gather(layer, u, u.r_pad)
+
+    def prefetch_unit(self, layer: int, u: WorkUnit) -> None:
+        """Stage-1: make (and keep) the unit's source partitions resident.
+        With ``batched_reads`` every missing partition is fetched in ONE
+        vectored storage submission instead of one read per partition; block
+        sizes are passed so the cache reserves room BEFORE the blocks are
+        materialized (host memory never transiently exceeds the budget)."""
+        pin = self.pipeline.pin_prefetched
+        keys = [(self.act_kind, layer, int(q)) for q in u.req_parts]
+        if self.pipeline.batched_reads:
+            name = self.act_name(layer)
+            sizes = {k: self.block_nbytes(layer, k[2]) for k in keys}
+
+            def batch_loader(missing):
+                reqs = []
+                for (_, _, q) in missing:
+                    a0, a1 = self.plan.ro.partition_slice(q)
+                    reqs.append((name, a0, a1))
+                return self.storage.read_rows_batched(reqs)
+
+            res = self.cache.prefetch_many(
+                keys, batch_loader, pin=pin, sizes=sizes
+            )
+            pinned = [k for k in keys if res.get(k)] if pin else []
+        else:
+            pinned = []
+            for key in keys:
+                resident = self.cache.prefetch(
+                    key,
+                    loader=partial(self.load_part_block, layer, key[2]),
+                    pin=pin,
+                    size_hint=self.block_nbytes(layer, key[2]),
+                )
+                if pin and resident:
+                    pinned.append(key)
+        if pinned:
+            self.prefetch_pins[(layer, u.p)] = pinned
+
+    # ----------------------------------------------------- transfer staging
+    @staticmethod
+    def h2d(arr: np.ndarray):
+        """Stage a host array onto the device with a GUARANTEED copy.
+        ``jax.device_put`` zero-copies 64-byte-aligned host buffers on the
+        CPU backend, which would let a staged device array alias a recycled
+        pool buffer; ``jnp.array(copy=True)`` always materializes an
+        independent device buffer (and on an accelerator is the same H2D
+        DMA either way). Blocks until the copy lands so the caller may
+        recycle ``arr`` immediately."""
+        dev = jnp.array(arr, copy=True)
+        dev.block_until_ready()
+        return dev
+
+    def _make_transfer_fn(self, keep_host: bool):
+        def transfer(u: WorkUnit, ga: np.ndarray, _aux):
+            """H2D staging for one forward unit (runs on the transfer
+            thread): copy the gathered buffer onto the device while the
+            previous unit's kernel runs, then recycle the host buffer —
+            unless the driver's ``after_compute`` hook still needs it on
+            the compute loop (snapshot mode)."""
+            dev = self.h2d(ga)
+            self.counters.bump("h2d_bytes", ga.nbytes)
+            if keep_host:
+                return (dev, ga), None
+            self._rt.pool.release(ga)
+            return (dev, None), None
+
+        return transfer
+
+    # -------------------------------------------------------------- forward
+    def run_layer(
+        self,
+        l: int,
+        params_l,
+        activate: bool,
+        after_compute: Optional[Callable[[WorkUnit, np.ndarray], None]] = None,
+        out_name: Optional[str] = None,
+    ) -> None:
+        """Stream one forward layer pass: gather GA^l for every scheduled
+        unit, apply the layer, and bypass-write the output activations to
+        ``out_name`` (default ``act{l+1}``).
+
+        ``after_compute(u, ga_host)`` runs on the compute loop with the
+        unit's host gather buffer still alive (the transfer stage is told to
+        keep it) — the training engine's snapshot persist hook. The runner
+        releases the buffer afterwards.
+
+        Ends with a write barrier and an invalidation of cached blocks of
+        the output layer (they would be stale for any later reader).
+        """
+        rt = self._rt
+        use_xfer = self._use_xfer
+        keep_host = after_compute is not None
+        name_out = out_name if out_name is not None else self.act_name(l + 1)
+        cast = self.store_dtype != self.dtype
+        fwd = self.fwd_fn(activate)
+        units = [self.plan.unit(p) for p in self.plan.schedule]
+        gather_fn = lambda u, _l=l: self.gather_padded(_l, u, "gather")
+        prefetch_fn = (
+            (lambda u, _l=l: self.prefetch_unit(_l, u))
+            if self.pipeline.enabled else None
+        )
+        for u, ga, _ in rt.run_stream(
+            units, gather_fn, prefetch_fn,
+            transfer_fn=self._make_transfer_fn(keep_host) if use_xfer else None,
+            wait_stage="compute_wait_fwd",
+            xfer_wait_stage="compute_wait_xfer_fwd",
+            xfer_up_stage="xfer_wait_up_fwd",
+        ):
+            with PhaseTimer(self.counters, "compute_fwd"):
+                if use_xfer:
+                    ga_dev, ga_host = ga
+                else:
+                    ga_host = ga
+                    ga_dev = jnp.asarray(ga)
+                    self.counters.bump("h2d_bytes", ga.nbytes)
+                out = fwd(params_l, ga_dev, u.topo)
+                out_dst = out[: u.n_dst]
+                if use_xfer and self.pipeline.async_d2h and not cast:
+                    # start the D2H copy now; the retire thread runs the
+                    # deferred np.asarray + bypass write
+                    out_dst.copy_to_host_async()
+                    out_np = None
+                else:
+                    out_np = np.asarray(out_dst)
+                    self.counters.bump("d2h_bytes", out_np.nbytes)
+                    if cast:
+                        # reduced-precision storage: downcast before the
+                        # bypass write (out_np is freshly owned)
+                        out_np = out_np.astype(self.store_dtype)
+            if after_compute is not None:
+                after_compute(u, ga_host)
+            if ga_host is not None and (not use_xfer or keep_host):
+                # the transfer thread recycled the host buffer already
+                # unless it was told to keep it for after_compute
+                rt.pool.release(ga_host)
+            with PhaseTimer(self.counters, "bypass_write"):
+                # bypass: output activations go straight to storage
+                # (write-behind when pipelined; out_np is freshly owned)
+                if out_np is None:
+                    rt.retire_write(name_out, u.v0, out_dst)
+                else:
+                    rt.write_rows(name_out, u.v0, out_np)
+        # barrier: the next layer reads name_out — all writes must be down
+        # (drain_writes retires pending D2H copies first)
+        rt.drain_writes()
+        # the output layer was just rewritten: cached blocks of it (loaded
+        # by a previous epoch's gathers) are stale — drop before any reader
+        self.cache.drop_layer(self.act_kind, l + 1, flush=False)

@@ -1,0 +1,267 @@
+"""Storage-offloaded inference + embedding serving (repro/infer/).
+
+Load-bearing properties:
+
+- the forward-only engine's final-layer output is BIT-IDENTICAL to
+  ``SSOEngine.forward``'s ``act{L}`` — at pipeline depth 0 and >= 1,
+  whichever backward mode the training engine was built for, and with
+  per-layer storage truncation on (truncation deletes consumed files, it
+  must not change the math);
+- ``EmbeddingServer`` lookups (original ids) match a dense whole-graph
+  forward reference for every queried node, batch misses into ONE vectored
+  storage submission, and keep honest hit/latency telemetry.
+"""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Counters, HostCache, SSOEngine, StorageTier, build_plan
+from repro.graph import (
+    gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
+)
+from repro.graph.csr import add_self_loops
+from repro.graph.synthetic import random_features
+from repro.infer import EmbeddingServer, OffloadedInference
+from repro.models.gnn.layers import (
+    full_graph_forward, full_graph_topo, get_gnn,
+)
+from repro.runtime import PipelineConfig
+
+
+def _setup(n_nodes=900, n_parts=5, d_in=16, seed=0):
+    g = add_self_loops(kronecker_graph(n_nodes, 7, seed=seed))
+    res = switching_aware_partition(g, n_parts, max_iters=8, seed=seed)
+    plan = build_plan(g, res.parts, n_parts, edge_weight=gcn_norm_coeffs(g))
+    X = random_features(g.n_nodes, d_in, seed)
+    return plan, X[plan.ro.perm]
+
+
+def _params(spec, dims, seed=0):
+    return spec.init(
+        jax.random.PRNGKey(seed), dims[0], dims[1], dims[-1], len(dims) - 1
+    )
+
+
+def _train_forward_act(plan, Xr, dims, params, mode):
+    """Reference: the training engine's final-layer activations."""
+    spec = get_gnn("gcn")
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    eng = SSOEngine(spec, plan, dims, st_, HostCache(8 << 20, st_, c), c,
+                    mode=mode, pipeline=PipelineConfig(depth=0))
+    eng.initialize(Xr)
+    eng.forward(params)
+    act = st_.read_rows(f"act{len(dims) - 1}", 0, plan.n_nodes)
+    peak = c.storage_peak_alloc_bytes
+    eng.close()
+    st_.close()
+    return act, peak
+
+
+def _infer(plan, Xr, dims, params, depth, budget_kb=4096, **kw):
+    spec = get_gnn("gcn")
+    c = Counters()
+    st_ = StorageTier(tempfile.mkdtemp(), counters=c)
+    inf = OffloadedInference(
+        spec, plan, dims, st_, HostCache(budget_kb << 10, st_, c), c,
+        pipeline=PipelineConfig(depth=depth), **kw,
+    )
+    inf.initialize(Xr)
+    name = inf.run(params)
+    emb = st_.read_rows(name, 0, plan.n_nodes)
+    return emb, c, st_, inf
+
+
+# ------------------------------------------------- engine output equivalence
+@pytest.mark.parametrize("mode", ["regather", "snapshot"])
+@pytest.mark.parametrize("depth", [0, 2])
+def test_inference_bit_identical_to_training_forward(mode, depth):
+    plan, Xr = _setup()
+    dims = [16, 24, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    ref, _ = _train_forward_act(plan, Xr, dims, params, mode)
+    emb, c, st_, inf = _infer(plan, Xr, dims, params, depth)
+    np.testing.assert_array_equal(emb, ref)
+    if depth > 0:
+        # the pipeline stages really ran on workers
+        assert c.stage_busy_seconds.get("gather", 0.0) > 0.0
+    inf.close()
+    st_.close()
+
+
+def test_inference_truncation_preserves_output_and_halves_storage():
+    """Per-layer truncation: intermediate activation files are gone after
+    the run, the peak allocated storage is strictly below the training
+    forward's (which keeps every layer), and the output is unchanged."""
+    plan, Xr = _setup()
+    dims = [16, 24, 24, 24, 8]   # deep: truncation has something to win
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    ref, train_peak = _train_forward_act(plan, Xr, dims, params, "regather")
+
+    emb_t, c_t, st_t, inf_t = _infer(plan, Xr, dims, params, 2,
+                                     free_consumed=True, keep_input=False)
+    emb_k, _, st_k, inf_k = _infer(plan, Xr, dims, params, 2,
+                                   free_consumed=False)
+    np.testing.assert_array_equal(emb_t, ref)
+    np.testing.assert_array_equal(emb_k, ref)
+    for l in range(0, len(dims) - 1):
+        assert not st_t.exists(f"act{l}")    # truncated
+        assert st_k.exists(f"act{l}")        # kept
+    assert c_t.storage_peak_alloc_bytes < train_peak
+    # ~half: L+1 live layer files -> at most two live layers at once
+    assert c_t.storage_peak_alloc_bytes <= 0.55 * train_peak
+    # repeatable: with the input retained, a second run matches
+    name = inf_k.run(params)
+    np.testing.assert_array_equal(st_k.read_rows(name, 0, plan.n_nodes), ref)
+    inf_t.close(); st_t.close()
+    inf_k.close(); st_k.close()
+
+
+def test_inference_fp16_storage_halves_table_and_stays_close():
+    plan, Xr = _setup()
+    dims = [16, 24, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    ref, _ = _train_forward_act(plan, Xr, dims, params, "regather")
+    emb, _, st_, inf = _infer(plan, Xr, dims, params, 2,
+                              store_dtype=np.float16)
+    assert emb.dtype == np.float16
+    assert st_.dtype("emb") == np.float16
+    np.testing.assert_allclose(
+        emb.astype(np.float32), ref, rtol=2e-2, atol=2e-2
+    )
+    inf.close()
+    st_.close()
+
+
+def test_inference_tight_cache_still_correct():
+    """Cache far below the working set: eviction/bypass engage, output is
+    still bit-identical."""
+    plan, Xr = _setup()
+    dims = [16, 24, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    ref, _ = _train_forward_act(plan, Xr, dims, params, "regather")
+    emb, c, st_, inf = _infer(plan, Xr, dims, params, 2, budget_kb=16)
+    np.testing.assert_array_equal(emb, ref)
+    assert c.cache_evictions + c.cache_bypass > 0
+    inf.close()
+    st_.close()
+
+
+# ------------------------------------------------------------- EmbeddingServer
+def _dense_ref(plan, Xr, dims, params):
+    spec = get_gnn("gcn")
+    rg = plan.ro.graph
+    topo = full_graph_topo(rg.indptr, rg.indices, rg.n_nodes,
+                           plan.edge_weight)
+    return np.asarray(full_graph_forward(spec, params, Xr, topo))
+
+
+def test_embedding_server_matches_dense_reference():
+    """Acceptance: every queried node (ORIGINAL ids) returns the embedding
+    a dense whole-graph forward produces for it."""
+    plan, Xr = _setup()
+    dims = [16, 24, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    emb, _, st_, inf = _infer(plan, Xr, dims, params, 2)
+    ref = _dense_ref(plan, Xr, dims, params)
+    srv = EmbeddingServer(st_, "emb", plan.ro, 1 << 20, block_rows=64)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        ids = rng.integers(0, plan.n_nodes, 48)
+        got = srv.lookup(ids)
+        np.testing.assert_allclose(
+            got, ref[plan.ro.inv_perm[ids]], rtol=1e-4, atol=1e-5
+        )
+    # exhaustive: every node, served in batches
+    all_ids = np.arange(plan.n_nodes)
+    got = np.concatenate(
+        [srv.lookup(all_ids[i : i + 100]) for i in range(0, plan.n_nodes, 100)]
+    )
+    np.testing.assert_allclose(
+        got, ref[plan.ro.inv_perm], rtol=1e-4, atol=1e-5
+    )
+    s = srv.stats()
+    assert s["rows_served"] == 6 * 48 + plan.n_nodes
+    assert 0.0 <= s["hit_rate"] <= 1.0
+    assert s["p50_ms"] <= s["p99_ms"]
+    srv.close()
+    inf.close()
+    st_.close()
+
+
+def test_embedding_server_batches_misses_and_hits_cache():
+    plan, Xr = _setup()
+    dims = [16, 24, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    _, _, st_, inf = _infer(plan, Xr, dims, params, 0)
+    srv = EmbeddingServer(st_, "emb", plan.ro, 4 << 20, block_rows=32)
+    c = st_.counters              # the tier charges the read ops
+    ids = np.arange(0, 320, 5)    # spans many 32-row blocks
+    ops0 = c.storage_read_ops
+    srv.lookup(ids)
+    # all the missed blocks were fetched in ONE vectored submission
+    assert c.storage_read_ops - ops0 == 1
+    m0 = srv.misses
+    assert m0 == ids.size and srv.hits == 0
+    srv.lookup(ids)               # identical batch: pure cache hits
+    assert c.storage_read_ops - ops0 == 1   # no new storage traffic
+    assert srv.hits == ids.size and srv.misses == m0
+    s = srv.stats()
+    assert s["hit_rate"] == 0.5
+    # reset_stats zeroes the telemetry but keeps the cache warm
+    srv.reset_stats()
+    srv.lookup(ids)
+    s = srv.stats()
+    assert s["queries"] == 1 and s["hit_rate"] == 1.0
+    assert c.storage_read_ops - ops0 == 1
+    srv.close()
+    inf.close()
+    st_.close()
+
+
+def test_embedding_server_over_budget_bypasses_but_serves():
+    plan, Xr = _setup()
+    dims = [16, 24, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    _, _, st_, inf = _infer(plan, Xr, dims, params, 0)
+    ref = _dense_ref(plan, Xr, dims, params)
+    # budget below a single block: every lookup bypasses, stays correct
+    srv = EmbeddingServer(st_, "emb", plan.ro, 256, block_rows=128)
+    ids = np.arange(0, plan.n_nodes, 7)
+    got = srv.lookup(ids)
+    np.testing.assert_allclose(
+        got, ref[plan.ro.inv_perm[ids]], rtol=1e-4, atol=1e-5
+    )
+    assert srv.cache.used_bytes <= srv.cache.budget
+    srv.close()
+    inf.close()
+    st_.close()
+
+
+def test_embedding_server_validates_ids():
+    plan, Xr = _setup(n_nodes=400, n_parts=4)
+    dims = [16, 16, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    _, _, st_, inf = _infer(plan, Xr, dims, params, 0)
+    srv = EmbeddingServer(st_, "emb", plan.ro, 1 << 20)
+    with pytest.raises(ValueError):
+        srv.lookup([plan.n_nodes])
+    with pytest.raises(ValueError):
+        srv.lookup([-1])
+    out = srv.lookup(np.array([], np.int64))
+    assert out.shape == (0, dims[-1])
+    srv.close()
+    with pytest.raises(RuntimeError):
+        srv.lookup([0])
+    inf.close()
+    st_.close()
