@@ -90,6 +90,7 @@ def run_engine_epoch(
     storage_latency_us: float = 0.0, storage_gbps: float = 0.0,
     per_epoch_walls: bool = False, gather_workers: int = 1,
     transfer_stage: bool = True, device_slots: int = 2,
+    trace: Optional[str] = None,
 ):
     """Returns (wall_s_per_epoch, modeled_s_per_epoch, counters).
 
@@ -97,7 +98,10 @@ def run_engine_epoch(
     ``overlap`` is the legacy knob for depth=1. Nonzero
     ``storage_latency_us``/``storage_gbps`` emulate an NVMe tier.
     ``gather_workers`` shards the pipelined host gather;
-    ``transfer_stage``/``device_slots`` control the async H2D/D2H stage."""
+    ``transfer_stage``/``device_slots`` control the async H2D/D2H stage.
+    ``trace`` writes a Chrome/Perfetto timeline of the timed epochs (the
+    warmup epoch's reset clears the trace ring, so the export shows steady
+    state only)."""
     from repro.runtime import PipelineConfig
 
     c = Counters()
@@ -115,6 +119,7 @@ def run_engine_epoch(
         pipeline=PipelineConfig(
             depth=depth, gather_workers=gather_workers,
             transfer_stage=transfer_stage, device_slots=device_slots,
+            trace=trace,
         ),
     )
     eng.initialize(wl["X"])

@@ -1,0 +1,106 @@
+"""Schema lint for CI JSON artifacts (BENCH_* and TRACE_* files).
+
+Validates that each artifact parses as JSON and carries the keys its
+consumers rely on:
+
+- ``BENCH_*`` files: the perf-trajectory payloads written by the benches'
+  ``--json`` flags — must be an object with a ``config`` section plus the
+  bench's own result section(s).
+- ``TRACE_*`` files: Chrome/Perfetto ``trace_event`` timelines from
+  ``--trace`` — must be the object form (``{"traceEvents": [...]}``), every
+  event must carry ``name``/``ph``/``ts``/``pid``/``tid`` with a known
+  phase, ``"X"`` events need a non-negative ``dur``, and at least one
+  non-metadata span must be present (an empty timeline means the tracer was
+  never wired through the run — exactly the regression this lint exists to
+  catch).
+
+Run:  python benchmarks/lint_artifacts.py FILE [FILE ...]
+Exits nonzero listing every failed check; prints one OK line per file.
+"""
+import json
+import os
+import sys
+
+KNOWN_PHASES = {"X", "B", "E", "b", "e", "n", "i", "I", "C", "M", "s", "t",
+                "f", "P"}
+
+
+def lint_trace(path: str, doc) -> list:
+    errs = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{path}: not object-form trace JSON (no traceEvents)"]
+    evs = doc["traceEvents"]
+    if not isinstance(evs, list):
+        return [f"{path}: traceEvents is not a list"]
+    spans = 0
+    for i, ev in enumerate(evs):
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                errs.append(f"{path}: event {i} missing '{key}'")
+                break
+        else:
+            ph = ev["ph"]
+            if ph not in KNOWN_PHASES:
+                errs.append(f"{path}: event {i} unknown phase {ph!r}")
+            if ph != "M" and "ts" not in ev:
+                errs.append(f"{path}: event {i} ({ph}) missing 'ts'")
+            if ph == "X":
+                if "dur" not in ev or ev["dur"] < 0:
+                    errs.append(
+                        f"{path}: event {i} ('X') missing/negative 'dur'"
+                    )
+                spans += 1
+        if len(errs) > 20:
+            errs.append(f"{path}: ... (truncated)")
+            break
+    if spans == 0:
+        errs.append(f"{path}: no complete ('X') spans — empty timeline")
+    return errs
+
+
+def lint_bench(path: str, doc) -> list:
+    errs = []
+    if not isinstance(doc, dict):
+        return [f"{path}: bench payload is not a JSON object"]
+    if "config" not in doc:
+        errs.append(f"{path}: missing 'config' section")
+    if len(doc) < 2:
+        errs.append(f"{path}: no result sections beside 'config'")
+    return errs
+
+
+def lint(path: str) -> list:
+    if not os.path.exists(path):
+        return [f"{path}: file not found"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: not valid JSON ({e})"]
+    # content-sniff first (a trace is unambiguous), filename prefix second —
+    # so `--trace foo.json` runs still lint as traces
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return lint_trace(path, doc)
+    if os.path.basename(path).startswith("TRACE"):
+        return lint_trace(path, doc)
+    return lint_bench(path, doc)
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: lint_artifacts.py FILE [FILE ...]", file=sys.stderr)
+        return 2
+    failed = False
+    for path in argv:
+        errs = lint(path)
+        if errs:
+            failed = True
+            for e in errs:
+                print(f"FAIL {e}", file=sys.stderr)
+        else:
+            print(f"OK   {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

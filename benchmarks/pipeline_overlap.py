@@ -23,7 +23,7 @@ import time
 
 
 def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers,
-             transfer=True, device_slots=2):
+             transfer=True, device_slots=2, trace=None):
     from benchmarks.common import run_engine_epoch
 
     out = {}
@@ -33,6 +33,8 @@ def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers,
             storage_latency_us=latency_us, storage_gbps=gbps,
             per_epoch_walls=True, gather_workers=workers,
             transfer_stage=transfer, device_slots=device_slots,
+            # only the pipelined run is worth a timeline
+            trace=trace if d == depth else None,
         )
         # min-of-epochs: robust to noisy-neighbour CPU spikes on shared boxes
         out[d] = dict(
@@ -72,6 +74,11 @@ def main() -> int:
     ap.add_argument("--json", nargs="?", const="BENCH_pipeline_overlap.json",
                     default=None, metavar="PATH",
                     help="also write the comparison as JSON (CI artifact)")
+    ap.add_argument("--trace", nargs="?", const="TRACE_pipeline_overlap.json",
+                    default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event timeline of "
+                         "the pipelined run's timed epochs (CI artifact; "
+                         "open in ui.perfetto.dev)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -91,8 +98,10 @@ def main() -> int:
     res = run_pair(wl, args.depth, args.epochs, args.cache_mb, args.mode,
                    args.storage_latency_us, args.storage_gbps,
                    args.gather_workers, transfer=not args.no_transfer,
-                   device_slots=args.device_slots)
+                   device_slots=args.device_slots, trace=args.trace)
     ser, pipe = res[0], res[args.depth]
+    if args.trace:
+        print(f"trace,{args.trace},written")
 
     # the pipeline must not change the math
     assert ser["loss"] == pipe["loss"], (

@@ -41,7 +41,7 @@ def run_sweep(args):
     inf = OffloadedInference(
         wl["spec"], plan, wl["dims"], st_,
         HostCache(args.infer_cache_mb << 20, st_, c), c,
-        pipeline=PipelineConfig(depth=args.depth),
+        pipeline=PipelineConfig(depth=args.depth, trace=args.trace),
         store_dtype=np.float16 if args.fp16 else None,
     )
     inf.initialize(wl["X"])
@@ -59,7 +59,10 @@ def run_sweep(args):
 
     results = []
     for budget_kb in args.budgets:
-        srv = EmbeddingServer(st_, table, plan.ro, budget_kb << 10)
+        # share the run's counters: lookup latency lands in the same
+        # metrics registry and — when tracing — the same timeline
+        srv = EmbeddingServer(st_, table, plan.ro, budget_kb << 10,
+                              counters=c)
         for ids in batches[: args.warmup]:    # warm the cache + code paths
             srv.lookup(ids)
         srv.reset_stats()   # hit-rate/latency report steady state only
@@ -81,6 +84,10 @@ def run_sweep(args):
             mean_ms=s["mean_ms"],
             block_rows=s["block_rows"],
         ))
+    if args.trace and c.tracer.enabled:
+        # re-export: the engine's close() wrote only the inference part;
+        # this picks up the serving lookup spans recorded since
+        c.tracer.export_chrome_trace(args.trace)
     st_.close()
     return results, dict(
         table=table, table_bytes=table_bytes, infer_seconds=t_infer,
@@ -116,6 +123,11 @@ def main() -> int:
                     const="BENCH_serving_throughput.json", default=None,
                     metavar="PATH",
                     help="also write the sweep as JSON (CI artifact)")
+    ap.add_argument("--trace", nargs="?",
+                    const="TRACE_serving_throughput.json", default=None,
+                    metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event timeline of "
+                         "the inference build + serving sweep")
     args = ap.parse_args()
     if args.smoke:
         args.nodes, args.parts, args.layers = 2000, 6, 2
@@ -151,6 +163,8 @@ def main() -> int:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"json,{args.json},written")
+    if args.trace:
+        print(f"trace,{args.trace},written")
 
     ok = True
     if len(results) < 2:

@@ -9,6 +9,7 @@ re-run to watch it resume.
 Run:  PYTHONPATH=src python examples/train_gnn_offload.py [--epochs 200]
 """
 import argparse
+import logging
 import os
 import tempfile
 
@@ -48,8 +49,15 @@ def main():
                          "transfer stage (2 = double buffer)")
     ap.add_argument("--no-transfer-stage", action="store_true",
                     help="disable the async H2D/D2H device-transfer stage")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace_event timeline "
+                         "(exported when the engine closes; open in "
+                         "ui.perfetto.dev)")
     ap.add_argument("--ckpt", default="/tmp/grinnder_ckpt")
     args = ap.parse_args()
+    # per-epoch summaries (stall top-3, cache hit rate, read amplification)
+    # log on the repro.obs logger — surface them on the console
+    logging.basicConfig(level=logging.INFO, format="%(name)s %(message)s")
 
     g = add_self_loops(kronecker_graph(args.nodes, 10, seed=0))
     res = switching_aware_partition(g, args.parts, max_iters=30)
@@ -78,7 +86,8 @@ def main():
                            depth=args.pipeline_depth,
                            gather_workers=args.gather_workers,
                            transfer_stage=not args.no_transfer_stage,
-                           device_slots=args.device_slots))
+                           device_slots=args.device_slots,
+                           trace=args.trace))
     engine.initialize(X)
 
     start = 0
@@ -107,6 +116,8 @@ def main():
               + ", ".join(f"{k}={v:.2f}"
                           for k, v in sorted(c.stage_stall_seconds.items())))
     engine.close()
+    if args.trace:
+        print(f"trace written to {args.trace} (open in ui.perfetto.dev)")
     storage.close()
     print("done")
 

@@ -86,6 +86,17 @@ class HostCache:
         self._tick = 0
         self._lock = threading.RLock()
         self._spill_queue = None   # Optional[StorageIOQueue]
+        # obs: callback gauges poll live state only when snapshotted; the
+        # hit/miss/eviction totals live on Counters fields, mirrored here so
+        # a metrics dump is self-contained
+        c = self.counters
+        m = c.metrics
+        m.gauge("cache.used_bytes", fn=lambda: self._bytes)
+        m.gauge("cache.peak_bytes", fn=lambda: self._peak)
+        m.gauge("cache.entries", fn=lambda: len(self._entries))
+        m.gauge("cache.hits", fn=lambda: c.cache_hits)
+        m.gauge("cache.misses", fn=lambda: c.cache_misses)
+        m.gauge("cache.evictions", fn=lambda: c.cache_evictions)
 
     def set_spill_queue(self, queue) -> None:
         """Route dirty-eviction flushes through an async ``StorageIOQueue``
@@ -124,6 +135,11 @@ class HostCache:
         e = self._entries.pop(key)
         self._bytes -= e.arr.nbytes
         self.counters.bump("cache_evictions")
+        if self.counters.tracer.enabled:
+            self.counters.tracer.instant(
+                "cache_evict", kind=key[0], layer=key[1], part=key[2],
+                bytes=int(e.arr.nbytes), dirty=bool(e.dirty),
+            )
         if e.dirty and e.spill_name is not None:
             self._spill(e.spill_name, e.spill_row0, e.arr)
 

@@ -20,6 +20,13 @@ import time
 from collections import defaultdict
 from typing import Dict
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
+
+# stalls shorter than this are pure queue-poll noise — not worth a trace
+# event each (they'd dominate the ring without adding timeline signal)
+_TRACE_STALL_MIN_S = 50e-6
+
 
 @dataclasses.dataclass
 class Counters:
@@ -52,17 +59,34 @@ class Counters:
     # device compute (flop estimate filled by engine when available)
     device_flops: int = 0
 
+    # soft cap on retained memory-timeline samples: past this the timeline
+    # is decimated in place (every 2nd sample dropped, sampling stride
+    # doubled) so unbounded soak runs keep a fixed-size, evenly thinned
+    # series. cache_peak_bytes stays exact regardless of decimation.
+    MEM_TIMELINE_CAP = 65536
+
     def __post_init__(self):
         self.phase_seconds: Dict[str, float] = defaultdict(float)
         # pipeline runtime accounting (repro/runtime/): stage -> seconds
         self.stage_busy_seconds: Dict[str, float] = defaultdict(float)
         self.stage_stall_seconds: Dict[str, float] = defaultdict(float)
         self._mem_timeline = []  # (t, cache_bytes) samples for Fig-9 style plots
+        self._mem_stride = 1     # keep every _mem_stride-th sample
+        self._mem_seen = 0       # samples offered since last reset
         self._lock = threading.Lock()
+        # observability attachment points (repro/obs/): every component that
+        # shares this Counters instance reaches the same tracer + registry.
+        # The tracer defaults to the shared disabled singleton; the engine
+        # swaps in a live one when PipelineConfig.trace is set.
+        self.tracer = NULL_TRACER
+        self.metrics = MetricsRegistry()
 
     def record_phase(self, name: str, seconds: float) -> None:
         with self._lock:
             self.phase_seconds[name] += seconds
+        # bridge to the timeline OUTSIDE the counters lock (tracer has its
+        # own); span ends "now" because callers report on interval exit
+        self.tracer.complete(name, seconds)
 
     def bump(self, field: str, amount: int = 1) -> None:
         """Thread-safe increment of a scalar counter field. Pipeline gather
@@ -71,20 +95,37 @@ class Counters:
         with self._lock:
             setattr(self, field, getattr(self, field) + amount)
 
-    def record_busy(self, stage: str, seconds: float) -> None:
-        """Work executed on a pipeline worker thread (overlappable)."""
+    def record_busy(self, stage: str, seconds: float, args=None) -> None:
+        """Work executed on a pipeline worker thread (overlappable).
+
+        Every busy interval is also bridged to ``self.tracer`` as a
+        completed span named after the stage — which is what guarantees any
+        stage with nonzero ``stage_busy_seconds`` shows up on an exported
+        timeline. ``args`` (partition id, bytes, file) annotate the span;
+        callers guard the dict allocation behind ``tracer.enabled``.
+        """
         with self._lock:
             self.stage_busy_seconds[stage] += seconds
+        self.tracer.complete(stage, seconds, args=args)
 
     def record_stall(self, stage: str, seconds: float) -> None:
         """Time a stage spent blocked (queue full/empty, backpressure)."""
         with self._lock:
             self.stage_stall_seconds[stage] += seconds
+        if seconds >= _TRACE_STALL_MIN_S:
+            self.tracer.complete("stall:" + stage, seconds)
 
     def sample_memory(self, cache_bytes: int) -> None:
         with self._lock:
             self.cache_peak_bytes = max(self.cache_peak_bytes, cache_bytes)
-            self._mem_timeline.append((time.perf_counter(), cache_bytes))
+            self._mem_seen += 1
+            if self._mem_seen % self._mem_stride == 0:
+                self._mem_timeline.append((time.perf_counter(), cache_bytes))
+                if len(self._mem_timeline) >= self.MEM_TIMELINE_CAP:
+                    del self._mem_timeline[::2]
+                    self._mem_stride *= 2
+        if self.tracer.enabled:
+            self.tracer.counter("cache_bytes", cache_bytes)
 
     def sample_storage_alloc(self, alloc_bytes: int) -> None:
         with self._lock:
@@ -94,7 +135,8 @@ class Counters:
 
     @property
     def memory_timeline(self):
-        return list(self._mem_timeline)
+        with self._lock:
+            return list(self._mem_timeline)
 
     # stage-name → pass classification for the per-pass overlap split.
     # Forward stages feed the forward loop; backward stages cover the loss
@@ -183,22 +225,37 @@ class Counters:
         )
 
     def snapshot(self) -> Dict[str, float]:
-        d = {
-            f.name: getattr(self, f.name)
-            for f in dataclasses.fields(self)
-        }
-        d.update({f"t_{k}": v for k, v in self.phase_seconds.items()})
-        d.update({f"busy_{k}": v for k, v in self.stage_busy_seconds.items()})
-        d.update({f"stall_{k}": v for k, v in self.stage_stall_seconds.items()})
+        # taken under the lock: benches snapshot while gather/transfer/IO
+        # worker threads are still mutating, and an unlocked read could see
+        # a dict mid-resize or torn field/phase combinations
+        with self._lock:
+            d = {
+                f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+            }
+            d.update({f"t_{k}": v for k, v in self.phase_seconds.items()})
+            d.update(
+                {f"busy_{k}": v for k, v in self.stage_busy_seconds.items()}
+            )
+            d.update(
+                {f"stall_{k}": v for k, v in self.stage_stall_seconds.items()}
+            )
         return d
 
     def reset(self) -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, 0)
-        self.phase_seconds.clear()
-        self.stage_busy_seconds.clear()
-        self.stage_stall_seconds.clear()
-        self._mem_timeline.clear()
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name, 0)
+            self.phase_seconds.clear()
+            self.stage_busy_seconds.clear()
+            self.stage_stall_seconds.clear()
+            self._mem_timeline.clear()
+            self._mem_stride = 1
+            self._mem_seen = 0
+        # warmup-epoch reset should also restart the trace/metrics so the
+        # exported timeline reflects steady state only (own locks; outside)
+        self.metrics.reset()
+        self.tracer.clear()
 
 
 class PhaseTimer:

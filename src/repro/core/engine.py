@@ -43,6 +43,7 @@ gathered buffer are unchanged; device copies are exact).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import TYPE_CHECKING, List, Optional, Sequence, Union
 
@@ -131,6 +132,18 @@ class SSOEngine:
             pipeline = PipelineConfig(depth=pipeline)
         self.pipeline = pipeline
         self.overlap = pipeline.enabled
+        # observability: a trace path swaps the shared no-op tracer on the
+        # counters for a live one; every component holding these counters
+        # (cache, storage queue, runtime stages) starts recording spans.
+        # The timeline is exported on close().
+        self._trace_path = pipeline.trace
+        if pipeline.trace:
+            from repro.obs import Tracer
+            self.counters.tracer = Tracer(
+                ring_events=pipeline.trace_ring_events
+            )
+        from repro.obs import EpochSummarizer
+        self._summarizer = EpochSummarizer(self.counters)
         self._rt = PipelineExecutor(pipeline, self.counters, storage, cache)
         # device-transfer stage: all three passes consume pre-staged device
         # arrays (H2D on the runtime's transfer thread) instead of paying
@@ -396,6 +409,8 @@ class SSOEngine:
         total_loss = 0.0
         units = [plan.unit(p) for p in plan.schedule]
         use_xfer = self._use_xfer
+        tracer = self.counters.tracer
+        t_loss = time.perf_counter()
 
         def loss_fetch(u: WorkUnit) -> np.ndarray:
             logits = st.read_rows(_act_name(L), u.v0, u.v1)
@@ -445,10 +460,14 @@ class SSOEngine:
                 rt.pool.release(lg_host)
             with PhaseTimer(self.counters, "scatter"):
                 self._grad_accumulate(L, u.p, np.arange(u.n_dst), dlog_np)
+        if tracer.enabled:
+            tracer.complete("loss_layer", time.perf_counter() - t_loss,
+                            args={"units": len(units)})
 
         # ---- layers L..1
         grads: List = [None] * L
         for l in range(L - 1, -1, -1):
+            t_layer = time.perf_counter()
             bwd = self._bwd(activate=(l < L - 1))
             dW_acc = None
             units = [plan.unit(p) for p in plan.schedule]
@@ -544,6 +563,9 @@ class SSOEngine:
             st.free(_grad_name(l + 1))
             if self.mode == "snapshot":
                 self.cache.drop_layer("snap", l, flush=False)
+            if tracer.enabled:
+                tracer.complete("bwd_layer", time.perf_counter() - t_layer,
+                                args={"layer": l, "units": len(units)})
         self.cache.drop_layer("grad", 0, flush=False)
         rt.drain_writes()
         st.free(_grad_name(0))
@@ -551,9 +573,13 @@ class SSOEngine:
 
     # ----------------------------------------------------------------- step
     def run_epoch(self, params: List, labels_reordered: np.ndarray):
+        t0 = time.perf_counter()
         with PhaseTimer(self.counters, "epoch"):
             self.forward(params)
             loss, grads = self.backward(params, labels_reordered)
+        # one structured line per epoch (repro.obs logger; silent unless
+        # logging is configured): stall top-3, cache hit rate, read amp
+        self._summarizer.log_epoch(time.perf_counter() - t0)
         return loss, grads
 
     def close(self) -> None:
@@ -563,3 +589,6 @@ class SSOEngine:
             # the runtime's writer is gone: later cache evictions must not
             # submit spills to a closed queue, even if close() raised
             self.cache.set_spill_queue(None)
+            tr = self.counters.tracer
+            if self._trace_path and tr.enabled:
+                tr.export_chrome_trace(self._trace_path)

@@ -213,6 +213,14 @@ class StorageIOQueue:
         self.max_inflight_observed = 0
         self._closed = False
         self._exc: Optional[BaseException] = None
+        # obs: queue depth polls live state only when snapshotted; per-op
+        # service latency (including any emulated device delay in tier
+        # subclasses) is observed in _run around the tier call
+        m = self.counters.metrics
+        m.gauge("storage.io_queue_depth", fn=lambda: len(self._q))
+        m.gauge("storage.io_inflight_bytes", fn=lambda: self._inflight_bytes)
+        self._read_lat = m.histogram("storage.read_seconds")
+        self._write_lat = m.histogram("storage.write_seconds")
         self._thread = threading.Thread(
             target=self._run, name="sso-io", daemon=True
         )
@@ -326,10 +334,23 @@ class StorageIOQueue:
                     self._cond.notify_all()
                 fut.set_exception(e)
                 continue
-            self.counters.record_busy(
-                "write_behind" if kind == "w" else "async_read",
-                time.perf_counter() - t0,
-            )
+            dt = time.perf_counter() - t0
+            if kind == "w":
+                self._write_lat.observe(dt)
+                args = None
+                if self.counters.tracer.enabled:
+                    args = {"file": payload[0], "bytes": int(payload[2].nbytes)}
+                self.counters.record_busy("write_behind", dt, args=args)
+            else:
+                self._read_lat.observe(dt)
+                args = None
+                if self.counters.tracer.enabled:
+                    if kind == "rb":
+                        args = {"ranges": len(payload)}
+                    else:
+                        args = {"file": payload[0],
+                                "rows": int(payload[2] - payload[1])}
+                self.counters.record_busy("async_read", dt, args=args)
             with self._cond:
                 if kind == "w":
                     self._inflight_bytes -= int(payload[2].nbytes)

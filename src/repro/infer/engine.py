@@ -32,6 +32,7 @@ The finished embedding table lands in the storage file ``final_name``
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Union
 
 import numpy as np
@@ -81,6 +82,16 @@ class OffloadedInference:
         elif isinstance(pipeline, int):
             pipeline = PipelineConfig(depth=pipeline)
         self.pipeline = pipeline
+        # observability: same wiring as SSOEngine — a trace path swaps the
+        # counters' no-op tracer for a live one, exported on close()
+        self._trace_path = pipeline.trace
+        if pipeline.trace:
+            from repro.obs import Tracer
+            self.counters.tracer = Tracer(
+                ring_events=pipeline.trace_ring_events
+            )
+        from repro.obs import EpochSummarizer
+        self._summarizer = EpochSummarizer(self.counters)
         self._rt = PipelineExecutor(pipeline, self.counters, storage, cache)
         # inference never creates dirty entries, so it needs no spill queue
         # of its own; wire the writer only when the cache has none (and
@@ -127,6 +138,7 @@ class OffloadedInference:
         n = self.plan.n_nodes
         st = self.storage
         L = self.n_layers
+        t0 = time.perf_counter()
         with PhaseTimer(self.counters, "infer"):
             for l in range(L):
                 last = l == L - 1
@@ -142,6 +154,7 @@ class OffloadedInference:
                     # gathers above (run_layer drained all writes): truncate
                     self.cache.drop_layer(self.runner.act_kind, l, flush=False)
                     st.free(act_file(l))
+        self._summarizer.log_epoch(time.perf_counter() - t0)
         return self.final_name
 
     # ------------------------------------------------------------ lifecycle
@@ -151,3 +164,6 @@ class OffloadedInference:
         finally:
             if self._wired_spill:
                 self.cache.set_spill_queue(None)
+            tr = self.counters.tracer
+            if self._trace_path and tr.enabled:
+                tr.export_chrome_trace(self._trace_path)

@@ -20,9 +20,10 @@ Design points:
   serving traffic is random point lookups, and a whole partition per miss
   would be pure read amplification. Cache keys are ``("emb", 0, block)``.
 - **Telemetry.** Row-granular hit/miss counts, per-lookup latency
-  (p50/p99/mean over a sliding window), and total queries/rows — the
-  numbers ``benchmarks/serving_throughput.py`` sweeps against the cache
-  budget.
+  (p50/p99/mean from the shared exponential-bucket histogram primitive,
+  ``serve.lookup_seconds`` in ``counters.metrics``), and total
+  queries/rows — the numbers ``benchmarks/serving_throughput.py`` sweeps
+  against the cache budget.
 
 Thread-safety: the cache and the I/O queue are thread-safe; concurrent
 lookups may race to load the same missing block, in which case the cache
@@ -32,7 +33,6 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import deque
 from typing import Dict, Optional
 
 import numpy as np
@@ -73,7 +73,11 @@ class EmbeddingServer:
         self.cache = HostCache(cache_budget_bytes, storage, self.counters)
         self._io = StorageIOQueue(storage, counters=self.counters)
         self._stats_lock = threading.Lock()
-        self._lat = deque(maxlen=int(latency_window))
+        # per-lookup latency: the shared exponential-bucket histogram
+        # primitive (replaces a hand-rolled sliding window of raw samples;
+        # ``latency_window`` is accepted for API compat but unused)
+        del latency_window
+        self._lat = self.counters.metrics.histogram("serve.lookup_seconds")
         self.hits = 0          # row-granular: queried row's block resident
         self.misses = 0
         self.queries = 0       # lookup() calls
@@ -133,12 +137,17 @@ class EmbeddingServer:
             if b in missed:
                 n_miss_rows += int(sel.sum())
         dt = time.perf_counter() - t0
+        self._lat.observe(dt)
         with self._stats_lock:
             self.queries += 1
             self.rows_served += int(ids.size)
             self.misses += n_miss_rows
             self.hits += int(ids.size) - n_miss_rows
-            self._lat.append(dt)
+        tracer = self.counters.tracer
+        if tracer.enabled:
+            tracer.complete("serve_lookup", dt, args={
+                "rows": int(ids.size), "missed_blocks": len(missed),
+            })
         return out
 
     def warm(self, node_ids) -> None:
@@ -155,13 +164,13 @@ class EmbeddingServer:
         with self._stats_lock:
             self.hits = self.misses = 0
             self.queries = self.rows_served = 0
-            self._lat.clear()
+        self._lat.reset()
 
     def stats(self) -> Dict[str, float]:
         with self._stats_lock:
-            lat = np.array(self._lat, np.float64)
             hits, misses = self.hits, self.misses
             queries, rows = self.queries, self.rows_served
+        lat = self._lat.snapshot()
         total = hits + misses
         out = dict(
             queries=queries,
@@ -172,15 +181,10 @@ class EmbeddingServer:
             cache_used_bytes=self.cache.used_bytes,
             cache_budget_bytes=self.cache.budget,
             block_rows=self.block_rows,
+            p50_ms=lat["p50"] * 1e3,
+            p99_ms=lat["p99"] * 1e3,
+            mean_ms=lat["mean"] * 1e3,
         )
-        if lat.size:
-            out.update(
-                p50_ms=float(np.percentile(lat, 50) * 1e3),
-                p99_ms=float(np.percentile(lat, 99) * 1e3),
-                mean_ms=float(lat.mean() * 1e3),
-            )
-        else:
-            out.update(p50_ms=0.0, p99_ms=0.0, mean_ms=0.0)
         return out
 
     # ------------------------------------------------------------- lifecycle

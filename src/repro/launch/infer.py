@@ -23,6 +23,7 @@ def _infer_smoke(
     batch: int = 64,
     fp16: bool = False,
     gather_workers: int = 1,
+    trace: str = None,
 ) -> dict:
     """Drive OffloadedInference (serial + pipelined) and the
     EmbeddingServer for a GNN arch; returns the check/stat dict."""
@@ -61,7 +62,12 @@ def _infer_smoke(
         cache = HostCache(cache_mb << 20, st_, c)
         inf = OffloadedInference(
             spec, plan, dims, st_, cache, c,
-            pipeline=PipelineConfig(depth=d, gather_workers=gather_workers),
+            pipeline=PipelineConfig(
+                depth=d, gather_workers=gather_workers,
+                # trace the requested depth only (the other iteration is
+                # the serial equivalence check)
+                trace=trace if d == depth else None,
+            ),
             store_dtype=store_dtype,
         )
         inf.initialize(X)
@@ -72,7 +78,10 @@ def _infer_smoke(
             st_.close()
             continue
         # serve the pipelined run's table and check against a dense forward
-        srv = EmbeddingServer(st_, name, plan.ro, serve_cache_kb << 10)
+        # (sharing the run's counters, so lookups land in the same metrics
+        # registry and — when tracing — the same timeline)
+        srv = EmbeddingServer(st_, name, plan.ro, serve_cache_kb << 10,
+                              counters=c)
         rg = plan.ro.graph
         topo = full_graph_topo(
             rg.indptr, rg.indices, rg.n_nodes, plan.edge_weight
@@ -90,6 +99,10 @@ def _infer_smoke(
         stats = srv.stats()
         stats["serve_matches_dense"] = serve_ok
         srv.close()
+        if trace and c.tracer.enabled:
+            # re-export: the engine's close() wrote the inference timeline
+            # before the serving lookups above recorded their spans
+            c.tracer.export_chrome_trace(trace)
         st_.close()
 
     pipeline_matches = bool(
@@ -126,7 +139,14 @@ def main():
     ap.add_argument("--fp16", action="store_true",
                     help="store activations/embeddings in float16 on "
                          "storage (compute stays float32)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace_event timeline of "
+                         "the inference + serving run (ui.perfetto.dev)")
     args = ap.parse_args()
+    if args.trace:
+        import logging
+        logging.basicConfig(level=logging.INFO,
+                            format="%(name)s %(message)s")
 
     from repro.configs import REGISTRY
 
@@ -140,9 +160,11 @@ def main():
         model, args.pipeline_depth, cache_mb=args.cache_mb,
         serve_cache_kb=args.serve_cache_kb, queries=args.queries,
         batch=args.batch, fp16=args.fp16,
-        gather_workers=args.gather_workers,
+        gather_workers=args.gather_workers, trace=args.trace,
     )
     print(f"{args.arch} infer smoke: {r}")
+    if args.trace:
+        print(f"trace written to {args.trace}")
     ok = (
         r.get("finite")
         and r.get("pipeline_matches_serial", True)

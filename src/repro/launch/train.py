@@ -18,7 +18,8 @@ import sys
 
 
 def _offload_smoke(model: str, depth: int, gather_workers: int = 1,
-                   transfer_stage: bool = True, device_slots: int = 2) -> dict:
+                   transfer_stage: bool = True, device_slots: int = 2,
+                   trace: str = None) -> dict:
     """Drive the SSO engine (serial + pipelined) for a GNN arch."""
     import tempfile
 
@@ -53,7 +54,10 @@ def _offload_smoke(model: str, depth: int, gather_workers: int = 1,
                         pipeline=PipelineConfig(
                             depth=d, gather_workers=gather_workers,
                             transfer_stage=transfer_stage,
-                            device_slots=device_slots))
+                            device_slots=device_slots,
+                            # trace the requested depth only (the other
+                            # iteration is the serial equivalence check)
+                            trace=trace if d == depth else None))
         eng.initialize(X)
         loss, grads = eng.run_epoch(params, Y)
         eng.close()
@@ -91,8 +95,15 @@ def main():
                     help="device staging slots for the transfer stage")
     ap.add_argument("--no-transfer-stage", action="store_true",
                     help="disable the async H2D/D2H device-transfer stage")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace_event timeline of "
+                         "the --offload run (open in ui.perfetto.dev)")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
+    if args.trace:
+        import logging
+        logging.basicConfig(level=logging.INFO,
+                            format="%(name)s %(message)s")
 
     from repro.configs import ASSIGNED, REGISTRY
 
@@ -117,8 +128,10 @@ def main():
         model = args.arch.split("-")[0]
         r = _offload_smoke(model, args.pipeline_depth, args.gather_workers,
                            transfer_stage=not args.no_transfer_stage,
-                           device_slots=args.device_slots)
+                           device_slots=args.device_slots, trace=args.trace)
         print(f"{args.arch} offload smoke: {r}")
+        if args.trace:
+            print(f"trace written to {args.trace}")
         ok = r.get("finite") and r.get("pipeline_matches_serial", True)
         sys.exit(0 if ok else 1)
     if args.smoke:

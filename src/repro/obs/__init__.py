@@ -1,0 +1,19 @@
+"""Unified observability layer for the SSO runtime.
+
+- :mod:`repro.obs.trace` — span tracer with Chrome/Perfetto export
+- :mod:`repro.obs.metrics` — counter/gauge/histogram registry
+- :mod:`repro.obs.summary` — per-epoch one-line structured summaries
+
+Deliberately dependency-free (stdlib only) and imported by
+``repro.core.counters``, so it must never import from ``repro.core`` /
+``repro.runtime``.
+"""
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.summary import EpochSummarizer
+from repro.obs.trace import NULL_SPAN, NULL_TRACER, Tracer
+
+__all__ = [
+    "Tracer", "NULL_TRACER", "NULL_SPAN",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "EpochSummarizer",
+]

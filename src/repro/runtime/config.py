@@ -63,6 +63,17 @@ class PipelineConfig:
         overflow the stalest shape bucket is dropped (counted as
         ``pool_trims``) so long multi-epoch runs can't pin peak gather
         footprint forever.
+    trace
+        Path to write a Chrome/Perfetto ``trace_event`` JSON timeline of
+        the run (open in ``ui.perfetto.dev``). Enables the span tracer on
+        the engine's ``Counters``: every pipeline stage's busy intervals,
+        per-unit prefetch→compute lifetimes, stalls ≥ 50 µs, cache
+        evictions, and the cache-byte counter track are recorded into a
+        bounded in-memory ring and exported on ``engine.close()``. ``None``
+        (default) keeps the shared no-op tracer — zero hot-path cost.
+    trace_ring_events
+        Capacity of the trace ring; once full, the oldest events are
+        dropped (the export notes how many under ``otherData``).
     """
 
     depth: int = 0
@@ -77,6 +88,8 @@ class PipelineConfig:
     device_slots: int = 2
     async_d2h: bool = True
     pool_max_bytes: int = 256 << 20
+    trace: Optional[str] = None
+    trace_ring_events: int = 1 << 18
 
     @property
     def enabled(self) -> bool:

@@ -100,6 +100,10 @@ class BufferPool:
         self.allocations = 0   # fresh np.zeros calls (for tests/telemetry)
         self.trims = 0         # free-list buckets dropped at the byte cap
         self.rejected = 0      # release() calls refused by the guards
+        if counters is not None:
+            m = counters.metrics
+            m.gauge("pool.free_bytes", fn=lambda: self._free_bytes)
+            m.gauge("pool.allocations", fn=lambda: self.allocations)
 
     @staticmethod
     def _key(shape: tuple, dtype) -> tuple:
@@ -255,6 +259,9 @@ class PipelineExecutor:
         self._retire_exc: Optional[BaseException] = None
         self._retire_thread: Optional[threading.Thread] = None
         self._closed = False
+        # distinguishes per-unit async trace span ids across run_stream
+        # calls (seq numbers restart at 0 every layer pass)
+        self._stream_seq = 0
 
     def _writer_owns(self, arr: np.ndarray) -> bool:
         w = self._writer
@@ -331,7 +338,11 @@ class PipelineExecutor:
                     self._retire_inflight -= 1
                     self._retire_cond.notify_all()
                 continue
-            self.counters.record_busy("d2h", time.perf_counter() - t0)
+            args = None
+            if self.counters.tracer.enabled:
+                args = {"file": name, "bytes": int(arr.nbytes)}
+            self.counters.record_busy("d2h", time.perf_counter() - t0,
+                                      args=args)
             with self._retire_cond:
                 self._retire_inflight -= 1
                 self._retire_cond.notify_all()
@@ -406,19 +417,33 @@ class PipelineExecutor:
             return
 
         c = self.counters
+        tracer = c.tracer
+        # per-unit async spans (prefetch-start -> compute-consumed) need ids
+        # unique across the layer passes of one trace; seq restarts per call
+        self._stream_seq += 1
+        sid = self._stream_seq
         nworkers = max(1, int(self.cfg.gather_workers))
         abort = threading.Event()
         q_ready = StageQueue("prefetch_out", self.cfg.capacity, c, abort)
         reasm = ReassemblyBuffer("gather_out", self.cfg.capacity, c, abort)
         errors: List[BaseException] = []
 
+        def _part(it):
+            p = getattr(it, "p", None)
+            return int(p) if p is not None else None
+
         def _prefetch_worker():
             try:
                 for seq, it in enumerate(items):
+                    if tracer.enabled:
+                        tracer.begin(f"unit:{gather_stage}",
+                                     f"{sid}.{seq}", part=_part(it))
                     if prefetch_fn is not None:
                         t0 = time.perf_counter()
                         prefetch_fn(it)
-                        c.record_busy(prefetch_stage, time.perf_counter() - t0)
+                        dt = time.perf_counter() - t0
+                        args = {"part": _part(it)} if tracer.enabled else None
+                        c.record_busy(prefetch_stage, dt, args=args)
                     q_ready.put((seq, it))
                 for _ in range(nworkers):
                     q_ready.put(DONE)
@@ -437,12 +462,15 @@ class PipelineExecutor:
                     seq, it = x
                     t0 = time.perf_counter()
                     buf = gather_fn(it)
-                    c.record_busy(gather_stage, time.perf_counter() - t0)
+                    dt = time.perf_counter() - t0
+                    args = {"part": _part(it)} if tracer.enabled else None
+                    c.record_busy(gather_stage, dt, args=args)
                     aux = None
                     if aux_fn is not None:
                         t0 = time.perf_counter()
                         aux = aux_fn(it)
-                        c.record_busy(aux_stage, time.perf_counter() - t0)
+                        c.record_busy(aux_stage, time.perf_counter() - t0,
+                                      args=args)
                     reasm.put(seq, (it, buf, aux))
             except PipelineAbort:
                 pass
@@ -475,7 +503,9 @@ class PipelineExecutor:
                         slot = slots.acquire()
                         t0 = time.perf_counter()
                         buf, aux = transfer_fn(it, buf, aux)
-                        c.record_busy("h2d", time.perf_counter() - t0)
+                        dt = time.perf_counter() - t0
+                        args = {"part": _part(it)} if tracer.enabled else None
+                        c.record_busy("h2d", dt, args=args)
                         q_dev.put((it, buf, aux, slot))
                 except PipelineAbort:
                     pass
@@ -510,6 +540,9 @@ class PipelineExecutor:
                     except PipelineAbort:
                         break
                     yield it, buf, aux
+                if tracer.enabled:
+                    # unit consumed: close its prefetch->compute span
+                    tracer.end(f"unit:{gather_stage}", f"{sid}.{seq}")
         finally:
             abort.set()
             for t in threads:

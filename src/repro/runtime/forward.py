@@ -29,6 +29,7 @@ cache, whose entries are raw storage blocks); compute always happens in
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Callable, Dict, Optional
 
@@ -240,6 +241,7 @@ class ForwardRunner:
         rt = self._rt
         use_xfer = self._use_xfer
         keep_host = after_compute is not None
+        t_layer = time.perf_counter()
         name_out = out_name if out_name is not None else self.act_name(l + 1)
         cast = self.store_dtype != self.dtype
         fwd = self.fwd_fn(activate)
@@ -296,3 +298,7 @@ class ForwardRunner:
         # the output layer was just rewritten: cached blocks of it (loaded
         # by a previous epoch's gathers) are stale — drop before any reader
         self.cache.drop_layer(self.act_kind, l + 1, flush=False)
+        tracer = self.counters.tracer
+        if tracer.enabled:
+            tracer.complete("fwd_layer", time.perf_counter() - t_layer,
+                            args={"layer": l, "units": len(units)})
