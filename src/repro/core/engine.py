@@ -55,6 +55,7 @@ from repro.core.cache import HostCache
 from repro.core.counters import Counters, PhaseTimer
 from repro.core.plan import PartitionPlan, WorkUnit
 from repro.core.storage import StorageTier
+from repro.kernels.dispatch import scatter_add_rows_ref
 from repro.models.gnn.layers import GNNSpec, LocalTopo
 
 if TYPE_CHECKING:  # runtime is imported lazily to avoid an import cycle
@@ -73,25 +74,11 @@ def _snap_name(layer: int, p: int) -> str:
     return f"snap{layer}_{p}"
 
 
-def _scatter_add_rows(
-    buf: np.ndarray, rows: np.ndarray, values: np.ndarray
-) -> None:
-    """Scatter-add ``values`` into ``buf[rows]`` with a fast path for a
-    contiguous unique row run — a direct slice add there is an order of
-    magnitude faster than the general ``np.add.at`` and bit-identical (each
-    row is touched exactly once either way). The loss layer always scatters
-    ``arange(n_dst)`` and regather scatter runs are sorted-unique, so dense
-    partitions hit the fast path constantly."""
-    n = rows.size
-    if n == 0:
-        return
-    r0 = int(rows[0])
-    if int(rows[n - 1]) - r0 + 1 == n and (
-        n == 1 or bool(np.all(np.diff(rows) == 1))
-    ):
-        buf[r0 : r0 + n] += values
-    else:
-        np.add.at(buf, rows, values)
+# Reference host scatter-add (contiguous slice-add fast path, sorted
+# np.add.reduceat segments, np.add.at residual) — kept under its historical
+# name; the engine itself goes through ``self.kernels.scatter_add_rows`` so
+# the Pallas scatter-grad kernel can take this call site over.
+_scatter_add_rows = scatter_add_rows_ref
 
 
 class SSOEngine:
@@ -154,11 +141,15 @@ class SSOEngine:
             # an eviction never stalls pipeline workers on a storage write;
             # grad/snap reads below go through the same FIFO for ordering
             cache.set_spill_queue(self._rt.writer)
+        # hot-loop kernel dispatch (Pallas vs numpy reference), shared with
+        # the runner so both halves of the pass pick the same path
+        from repro.kernels.dispatch import KernelDispatch
+        self.kernels = KernelDispatch(pipeline.kernels, self.counters)
         # the shared forward layer pass (also the backward's regather path);
         # snapshot-mode backward pins live in the runner's pin table too
         self.fwd_runner = ForwardRunner(
             spec, plan, self.dims, storage, cache, self.counters, self._rt,
-            pipeline, dtype=self.dtype,
+            pipeline, dtype=self.dtype, kernels=self.kernels,
         )
         self._prefetch_pins = self.fwd_runner.prefetch_pins
         self._jit_bwd = {}
@@ -356,13 +347,14 @@ class SSOEngine:
                 # retires on the I/O queue (buf is freshly owned and never
                 # touched again); later fetches of this region go through
                 # the same FIFO, so they see it without blocking here.
-                _scatter_add_rows(buf, rows_local, values)
+                # bump(): accumulates may race pipeline workers' counters
+                self.kernels.scatter_add_rows(buf, rows_local, values)
                 self._rt.write_rows(name, a0, buf)
-                self.counters.host_scatter_bytes += values.nbytes
+                self.counters.bump("host_scatter_bytes", values.nbytes)
                 return
-        _scatter_add_rows(buf, rows_local, values)
+        self.kernels.scatter_add_rows(buf, rows_local, values)
         self.cache.release(key)
-        self.counters.host_scatter_bytes += values.nbytes
+        self.counters.bump("host_scatter_bytes", values.nbytes)
 
     def _grad_fetch(self, layer: int, p: int) -> np.ndarray:
         """Read ∇A^{layer} for destination partition p (padded to topo rows).
@@ -427,10 +419,9 @@ class SSOEngine:
         def loss_transfer(u: WorkUnit, lg: np.ndarray, _aux):
             # stage logits AND padded labels on the transfer thread
             lb = _pad_labels(u)
-            lg_dev = self._h2d(lg)
+            lg_dev = self.fwd_runner.stage_h2d(lg)
             lb_dev = jnp.asarray(lb)   # lb is freshly owned: aliasing is fine
-            self.counters.bump("h2d_bytes", lg.nbytes + lb.nbytes)
-            rt.pool.release(lg)
+            self.counters.bump("h2d_bytes", lb.nbytes)
             return (lg_dev, lb_dev), None
 
         for u, lg, _ in rt.run_stream(
@@ -466,15 +457,32 @@ class SSOEngine:
 
         # ---- layers L..1
         grads: List = [None] * L
+        # Pallas dispatch: the regather backward consumes the partition
+        # stack directly (device-side regather + vjp at GA). Snapshot mode
+        # reads persisted GA buffers — no partition blocks to stack — so it
+        # stays on the reference path (a documented dispatch rule).
+        use_stacked = self.kernels.use_pallas and self.mode == "regather"
         for l in range(L - 1, -1, -1):
             t_layer = time.perf_counter()
-            bwd = self._bwd(activate=(l < L - 1))
+            if use_stacked:
+                bwd = self.kernels.fused_backward_fn(
+                    self.spec, activate=(l < L - 1)
+                )
+            else:
+                bwd = self._bwd(activate=(l < L - 1))
             dW_acc = None
             units = [plan.unit(p) for p in plan.schedule]
             if self.mode == "regather":
-                gather_fn = lambda u, _l=l: self._gather_padded(
-                    _l, u, "regather"
-                )
+                if use_stacked:
+                    gather_fn = lambda u, _l=l: (
+                        self.fwd_runner.stacked_gather_timed(
+                            _l, u, "regather"
+                        )
+                    )
+                else:
+                    gather_fn = lambda u, _l=l: self._gather_padded(
+                        _l, u, "regather"
+                    )
                 prefetch_fn = (
                     (lambda u, _l=l: self._prefetch_unit(_l, u))
                     if self.pipeline.enabled else None
@@ -498,17 +506,16 @@ class SSOEngine:
             use_xfer = self._use_xfer
 
             def bwd_transfer(u, ga, d_out, _l=l):
-                # stage GA and ∇A^{l+1} on the transfer thread; when the aux
-                # stage is off, its fetch also lands here (still off the
-                # compute thread)
+                # stage GA (or the Pallas partition stack) and ∇A^{l+1} on
+                # the transfer thread; when the aux stage is off, its fetch
+                # also lands here (still off the compute thread)
                 if d_out is None:
                     d_out = self._grad_fetch(_l + 1, u.p)
-                ga_dev = self._h2d(ga)
-                do_dev = self._h2d(d_out)
-                self.counters.bump("h2d_bytes", ga.nbytes + d_out.nbytes)
-                rt.pool.release(ga)
-                rt.pool.release(d_out)
-                return ga_dev, do_dev
+                do_dev = self.fwd_runner.stage_h2d(d_out)
+                if use_stacked:
+                    stack_dev = self.fwd_runner.stage_h2d(ga.stack)
+                    return (stack_dev, self.fwd_runner.idx_dev(u)), do_dev
+                return self.fwd_runner.stage_h2d(ga), do_dev
 
             for u, ga, d_out in rt.run_stream(
                 units, gather_fn, prefetch_fn, aux_fn=aux_fn,
@@ -523,14 +530,30 @@ class SSOEngine:
                     d_out = self._grad_fetch(l + 1, u.p)
                 with PhaseTimer(self.counters, "compute_bwd"):
                     if use_xfer:
-                        ga_dev, do_dev = ga, d_out
+                        dev_in, do_dev = ga, d_out
                         ga = d_out = None
+                    elif use_stacked:
+                        self.counters.bump(
+                            "h2d_bytes", ga.stack.nbytes + d_out.nbytes
+                        )
+                        # aligned pool buffers: asarray aliases; safe — the
+                        # dga materialization below blocks before release
+                        dev_in = (
+                            jnp.asarray(ga.stack),
+                            self.fwd_runner.idx_dev(u),
+                        )
+                        do_dev = jnp.asarray(d_out)
                     else:
                         self.counters.bump(
                             "h2d_bytes", ga.nbytes + d_out.nbytes
                         )
-                        ga_dev, do_dev = jnp.asarray(ga), jnp.asarray(d_out)
-                    dp, dga = bwd(params[l], ga_dev, u.topo, do_dev)
+                        dev_in, do_dev = jnp.asarray(ga), jnp.asarray(d_out)
+                    if use_stacked:
+                        dp, dga = bwd(
+                            params[l], dev_in[0], dev_in[1], u.topo, do_dev
+                        )
+                    else:
+                        dp, dga = bwd(params[l], dev_in, u.topo, do_dev)
                     dga_req = dga[: u.n_req]
                     # start the D2H copy; it lands under the dW accumulate
                     dga_req.copy_to_host_async()
@@ -542,7 +565,7 @@ class SSOEngine:
                     dga_np = np.asarray(dga_req)
                     self.counters.bump("d2h_bytes", dga_np.nbytes)
                 if ga is not None:
-                    rt.pool.release(ga)
+                    rt.pool.release(ga.stack if use_stacked else ga)
                 if d_out is not None:
                     rt.pool.release(d_out)
                 if l > 0:

@@ -9,4 +9,9 @@ tiles, HBM->VMEM streaming via BlockSpec index maps / scalar prefetch).
 - edge_softmax:     GAT segment softmax over padded per-block edge tiles
 - embedding_bag:    recsys gather-reduce with scalar-prefetched row DMAs
 - flash_attention:  online-softmax attention (GQA + sliding window)
+- gather_scatter:   fused gather/aggregate + scatter-grad over the staged
+                    partition stack (the engine hot path; see README.md)
+
+``dispatch.py`` routes the engine's hot loops to these kernels or their
+numpy references by backend/mode/shape (``PipelineConfig.kernels``).
 """

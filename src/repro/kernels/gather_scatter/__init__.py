@@ -1,0 +1,17 @@
+from repro.kernels.gather_scatter.gather_scatter import (
+    gather_aggregate_pallas, gather_rows_pallas, scatter_add_pallas,
+)
+from repro.kernels.gather_scatter.ops import (
+    gather_aggregate, gather_rows, pick_d_block, scatter_add,
+)
+from repro.kernels.gather_scatter.ref import (
+    gather_aggregate_ref, gather_aggregate_ref_fma, gather_rows_ref,
+    scatter_add_ref,
+)
+
+__all__ = [
+    "gather_aggregate_pallas", "gather_rows_pallas", "scatter_add_pallas",
+    "gather_aggregate", "gather_rows", "pick_d_block", "scatter_add",
+    "gather_aggregate_ref", "gather_aggregate_ref_fma", "gather_rows_ref",
+    "scatter_add_ref",
+]

@@ -1,0 +1,170 @@
+"""Fused gather / aggregate / scatter-add Pallas kernels — the SSO hot path.
+
+Three kernels replace the engine's host-side numpy loops on the staged
+partition buffer (the "stack": whole cached partition blocks memcpy'd back
+to back, plus one zeroed pad row):
+
+- ``gather_rows_pallas``: ``out[i] = table[rows[i]]`` — the device-side
+  gather that turns the stack into ``GA_p^l`` bit-exactly. One single-row
+  HBM->VMEM DMA per (row, feature-block) grid step, the row id scalar-
+  prefetched into the BlockSpec index map (embedding_bag idiom minus the
+  reduce).
+- ``gather_aggregate_pallas``: ``out[dst[e]] += w[e] * table[erows[e]]`` —
+  gather AND layer aggregation in one kernel (GCN message passing), never
+  materializing the gathered copy. Destination rows must be sorted
+  ascending: the output block accumulates in VMEM across consecutive grid
+  steps of the same dst row (bsr_spmm idiom) and is re-initialized from the
+  aliased ``base`` on first touch, so a revisited row would clobber its
+  earlier partial sum. Untouched rows keep ``base`` content (the wrapper
+  passes zeros). The per-edge accumulate compiles to a fused multiply-add
+  (one rounding per edge); deterministic, and bit-reproduced by the
+  ``ref.gather_aggregate_ref_fma`` oracle — rows receiving two or more
+  edges may differ from the plain multiply-then-add reference by 1 ulp.
+- ``scatter_add_pallas``: ``out = base; out[rows[i]] += values[i]`` — the
+  backward's ∇A write-back. Same sorted-rows/first-touch-init structure;
+  ``base`` is aliased into the output (``input_output_aliases``) so
+  untouched rows cost nothing and the accumulation order is the sequential
+  grid order — deterministic, bit-identical to ``np.add.at`` on sorted rows.
+
+All three run under ``interpret=True`` on CPU (how CI validates them); the
+TPU target is v5e, where ``d_block=128`` matches the lane width. The
+per-edge weight rides as an ``(E, 1)`` array in ``(1, 1)`` blocks — fine in
+interpret mode; a Mosaic build would widen it to the lane size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ------------------------------------------------------------- gather rows
+def _gather_kernel(rows_ref, row_ref, out_ref):
+    out_ref[0] = row_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def gather_rows_pallas(
+    table: jax.Array,   # (N, D)
+    rows: jax.Array,    # (R,) int32, any order, values in [0, N)
+    d_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    R = rows.shape[0]
+    N, D = table.shape
+    assert D % d_block == 0
+    nD = D // d_block
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # rows
+        grid=(R, nD),
+        in_specs=[
+            pl.BlockSpec((1, d_block), lambda i, j, rows_: (rows_[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, d_block), lambda i, j, rows_: (i, j)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, D), table.dtype),
+        interpret=interpret,
+    )(rows, table)
+
+
+# -------------------------------------------------------- gather-aggregate
+def _gather_agg_kernel(dst_ref, erow_ref, w_ref, row_ref, base_ref, out_ref):
+    # grid = (nD, E): j = feature block (slow), i = edge (fast)
+    i = pl.program_id(1)
+
+    @pl.when((i == 0) | (dst_ref[i] != dst_ref[jnp.maximum(i - 1, 0)]))
+    def _init():
+        # first touch of this dst row (within this feature block's pass):
+        # start from the aliased base block — untouched rows keep base
+        out_ref[0] = base_ref[0]
+
+    out_ref[0] += w_ref[0, 0] * row_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def gather_aggregate_pallas(
+    table: jax.Array,   # (N, D) source rows (the staged partition stack)
+    erows: jax.Array,   # (E,) int32 — table row per edge
+    dst: jax.Array,     # (E,) int32 SORTED ascending — output row per edge
+    w: jax.Array,       # (E,) edge weights (0 for padding edges)
+    base: jax.Array,    # (n_dst, D) initial output (zeros for plain aggregate)
+    d_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    E = erows.shape[0]
+    _, D = table.shape
+    n_dst = base.shape[0]
+    assert D % d_block == 0
+    nD = D // d_block
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # dst, erows
+        grid=(nD, E),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j, i, dst_, er_: (i, 0)),
+            pl.BlockSpec((1, d_block), lambda j, i, dst_, er_: (er_[i], j)),
+            pl.BlockSpec((1, d_block), lambda j, i, dst_, er_: (dst_[i], j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, d_block), lambda j, i, dst_, er_: (dst_[i], j)
+        ),
+    )
+    return pl.pallas_call(
+        _gather_agg_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst, D), table.dtype),
+        # operand order incl. scalar prefetch: dst=0, erows=1, w=2, table=3,
+        # base=4 — base aliases the output so untouched rows keep its bits
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(dst, erows, w.reshape(-1, 1).astype(table.dtype), table, base)
+
+
+# ------------------------------------------------------------- scatter-add
+def _scatter_kernel(rows_ref, base_ref, val_ref, out_ref):
+    # grid = (nD, R): j = feature block (slow), i = value row (fast)
+    i = pl.program_id(1)
+
+    @pl.when((i == 0) | (rows_ref[i] != rows_ref[jnp.maximum(i - 1, 0)]))
+    def _init():
+        out_ref[0] = base_ref[0]
+
+    out_ref[0] += val_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def scatter_add_pallas(
+    base: jax.Array,    # (N, D) accumulate target
+    rows: jax.Array,    # (R,) int32 SORTED ascending (duplicates allowed)
+    values: jax.Array,  # (R, D)
+    d_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    R = rows.shape[0]
+    N, D = base.shape
+    assert D % d_block == 0
+    nD = D // d_block
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # rows
+        grid=(nD, R),
+        in_specs=[
+            pl.BlockSpec((1, d_block), lambda j, i, rows_: (rows_[i], j)),
+            pl.BlockSpec((1, d_block), lambda j, i, rows_: (i, j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, d_block), lambda j, i, rows_: (rows_[i], j)
+        ),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), base.dtype),
+        # operands incl. scalar prefetch: rows=0, base=1, values=2
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(rows, base, values)

@@ -1,0 +1,98 @@
+"""Shape-safe wrappers over the gather/scatter Pallas kernels.
+
+The raw kernels require the feature dim to be a multiple of ``d_block`` and
+choke on zero-sized grids; these wrappers pad the feature axis (choosing a
+block: the next pow2 for narrow features, 128 — the v5e lane width — for
+wide ones), early-return the exact degenerate results for empty inputs, and
+slice the padding back off. The padded columns are zero on every input, so
+they never leak into the live columns' bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_scatter.gather_scatter import (
+    gather_aggregate_pallas, gather_rows_pallas, scatter_add_pallas,
+)
+
+
+def pick_d_block(d: int) -> int:
+    """Feature-axis block: pow2 cover for narrow features (one block, no
+    128x padding blowup in interpret mode), the 128 lane width otherwise."""
+    b = 8
+    while b < d and b < 128:
+        b *= 2
+    return b
+
+
+def _pad_cols(x: jax.Array, d_block: int) -> jax.Array:
+    d = x.shape[-1]
+    pad = (-d) % d_block
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def gather_rows(
+    table: jax.Array, rows: jax.Array, interpret: bool = False
+) -> jax.Array:
+    """``table[rows]`` via the Pallas row-DMA gather (bit-exact copy)."""
+    D = table.shape[1]
+    if rows.shape[0] == 0 or D == 0:
+        return jnp.zeros((rows.shape[0], D), table.dtype)
+    db = pick_d_block(D)
+    out = gather_rows_pallas(
+        _pad_cols(table, db), rows.astype(jnp.int32),
+        d_block=db, interpret=interpret,
+    )
+    return out[:, :D]
+
+
+def gather_aggregate(
+    table: jax.Array,
+    erows: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    n_dst: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """``out[dst[e]] += w[e] * table[erows[e]]`` over zeros, fused.
+
+    ``dst`` must be sorted ascending (the engine's work-unit topologies
+    are built that way; padding edges are re-pointed at ``n_dst - 1`` by
+    the caller so sortedness survives). Accumulation is sequential in edge
+    order and deterministic; each edge contributes via one fused
+    multiply-add (see ``ref.gather_aggregate_ref_fma`` for the bit-exact
+    oracle).
+    """
+    D = table.shape[1]
+    if erows.shape[0] == 0 or n_dst == 0 or D == 0:
+        return jnp.zeros((n_dst, D), table.dtype)
+    db = pick_d_block(D)
+    base = jnp.zeros((n_dst, D + (-D) % db), table.dtype)
+    out = gather_aggregate_pallas(
+        _pad_cols(table, db), erows.astype(jnp.int32),
+        dst.astype(jnp.int32), w, base,
+        d_block=db, interpret=interpret,
+    )
+    return out[:, :D]
+
+
+def scatter_add(
+    base: jax.Array, rows: jax.Array, values: jax.Array,
+    interpret: bool = False,
+) -> jax.Array:
+    """``out = base; out[rows] += values`` with deterministic (sequential
+    grid-order) accumulation. ``rows`` must be sorted ascending; duplicates
+    accumulate in order, untouched rows keep ``base``'s exact bits."""
+    D = base.shape[1]
+    if rows.shape[0] == 0 or D == 0:
+        return jnp.asarray(base)
+    db = pick_d_block(D)
+    out = scatter_add_pallas(
+        _pad_cols(base, db), rows.astype(jnp.int32),
+        _pad_cols(values, db).astype(base.dtype),
+        d_block=db, interpret=interpret,
+    )
+    return out[:, :D]

@@ -1,0 +1,64 @@
+"""Numpy oracles for the gather/scatter kernels (bit-identity targets).
+
+Each reference performs its adds in the same sequential order as the
+kernel's grid (edge / value-row order), so fp32 comparisons against the
+Pallas outputs are exact, not tolerance-based.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def gather_rows_ref(table: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    return np.asarray(table)[np.asarray(rows)]
+
+
+def gather_aggregate_ref(
+    table: np.ndarray,
+    erows: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray,
+    n_dst: int,
+) -> np.ndarray:
+    """Vectorized oracle (multiply-round, then add). The Pallas kernel's
+    edge accumulation compiles to a fused multiply-add — one rounding per
+    edge instead of two — so rows receiving >= 2 edges may differ from this
+    by 1 ulp; :func:`gather_aggregate_ref_fma` reproduces the kernel's
+    arithmetic bit-exactly."""
+    table = np.asarray(table)
+    out = np.zeros((n_dst, table.shape[1]), table.dtype)
+    if erows.size:
+        msg = np.asarray(w)[:, None].astype(table.dtype) * table[erows]
+        np.add.at(out, np.asarray(dst), msg)
+    return out
+
+
+def gather_aggregate_ref_fma(
+    table: np.ndarray,
+    erows: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray,
+    n_dst: int,
+) -> np.ndarray:
+    """Bit-exact fp32 oracle for the kernel's FMA accumulation order: the
+    f64 product of two fp32 values is exact, so product+accumulator summed
+    in f64 and rounded once per edge IS the fused multiply-add. Python loop
+    — test-sized inputs only."""
+    table = np.asarray(table)
+    out = np.zeros((n_dst, table.shape[1]), table.dtype)
+    w = np.asarray(w)
+    for e in range(np.asarray(erows).size):
+        prod = np.float64(w[e]) * table[erows[e]].astype(np.float64)
+        out[dst[e]] = (
+            out[dst[e]].astype(np.float64) + prod
+        ).astype(table.dtype)
+    return out
+
+
+def scatter_add_ref(
+    base: np.ndarray, rows: np.ndarray, values: np.ndarray
+) -> np.ndarray:
+    out = np.array(base)
+    if rows.size:
+        np.add.at(out, np.asarray(rows), np.asarray(values, dtype=out.dtype))
+    return out

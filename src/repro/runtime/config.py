@@ -63,6 +63,23 @@ class PipelineConfig:
         overflow the stalest shape bucket is dropped (counted as
         ``pool_trims``) so long multi-epoch runs can't pin peak gather
         footprint forever.
+    kernels
+        Hot-loop kernel dispatch (``repro.kernels.dispatch``): ``"auto"``
+        picks the fused Pallas gather/aggregate + scatter-grad kernels on an
+        accelerator backend and the numpy/jnp reference path on CPU;
+        ``"pallas"`` / ``"reference"`` force one side (Pallas runs under
+        ``interpret=True`` on CPU — how CI exercises the fused path). Both
+        paths are bit-identical for the engine's schedules; the Pallas path
+        additionally skips the host-side gathered copy by staging whole
+        partition blocks and indexing rows on device.
+    zero_copy_h2d
+        Stage host buffers onto the device with a zero-copy
+        ``jax.device_put`` (the :class:`BufferPool`'s 64-byte-aligned
+        buffers satisfy the XLA CPU aliasing requirement) instead of the
+        defensive ``jnp.array(copy=True)``. Recycling of a zero-copied
+        buffer is deferred until the device array holding it is dropped
+        (tracked by the pool), so the aliasing hazard the copy used to guard
+        against cannot occur. ``False`` restores the forced copy.
     trace
         Path to write a Chrome/Perfetto ``trace_event`` JSON timeline of
         the run (open in ``ui.perfetto.dev``). Enables the span tracer on
@@ -88,6 +105,8 @@ class PipelineConfig:
     device_slots: int = 2
     async_d2h: bool = True
     pool_max_bytes: int = 256 << 20
+    kernels: str = "auto"
+    zero_copy_h2d: bool = True
     trace: Optional[str] = None
     trace_ring_events: int = 1 << 18
 

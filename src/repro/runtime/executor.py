@@ -62,7 +62,16 @@ class BufferPool:
     pipeline's bounded queues keep at most ``capacity + 1`` buffers of a
     shape in flight.
 
-    Two hygiene guards on top of the plain free-list design:
+    Buffers are allocated 64-byte aligned (a uint8 backing allocation with
+    an offset view) so ``jax.device_put`` on the XLA CPU backend can alias
+    them zero-copy instead of copying — the transfer stage's
+    ``zero_copy_h2d`` path depends on this. jax retains the exact ndarray
+    object it aliased, which gives the pool a safe deferred-release
+    protocol (:meth:`defer_release`): park a weakref callback on the issued
+    view and recycle the backing allocation only once the device array (and
+    every pending execution reading it) has dropped the view.
+
+    Hygiene guards on top of the plain free-list design:
 
     - ``max_bytes`` caps the total bytes parked on free lists. On overflow
       the least-recently-used shape bucket is dropped wholesale (``trims``
@@ -71,12 +80,14 @@ class BufferPool:
       footprint forever.
     - ``release`` refuses buffers that are unsafe to recycle: non-ndarray
       objects (e.g. a device array reaching a host-buffer release path),
-      non-contiguous or view arrays (a recycled view would alias its base),
-      buffers the pool never issued, and buffers still owned by a pending
-      ``StorageIOQueue.submit_write`` (``owner_check``). Rejected releases
-      are silently dropped and counted (``pool_release_rejects``) — the
-      buffer simply isn't recycled.
+      non-contiguous arrays, views of anything but the pool's own aligned
+      backing allocations, buffers the pool never issued, and buffers still
+      owned by a pending ``StorageIOQueue.submit_write`` (``owner_check``).
+      Rejected releases are silently dropped and counted
+      (``pool_release_rejects``) — the buffer simply isn't recycled.
     """
+
+    ALIGN = 64
 
     def __init__(
         self,
@@ -85,21 +96,30 @@ class BufferPool:
         owner_check: Optional[Callable[[np.ndarray], bool]] = None,
     ):
         self._free: "OrderedDict[tuple, list]" = OrderedDict()
-        self._lock = threading.Lock()
-        # buffers currently checked out, id() -> weakref. Weakrefs (not bare
-        # ids) because a buffer dropped without release — e.g. in-flight on
-        # an aborted pipeline — is eventually gc'd and its address reused;
-        # the identity check against the live referent below keeps such a
-        # stale entry from blessing an unrelated array.
+        # RLock: deferred-release weakref callbacks can fire on whatever
+        # thread happens to drop the last device reference — including one
+        # already inside a pool method via a gc pass during allocation.
+        self._lock = threading.RLock()
+        # buffers currently checked out, id() -> (weakref, raw backing
+        # array). Weakrefs (not bare ids) because a buffer dropped without
+        # release — e.g. in-flight on an aborted pipeline — is eventually
+        # gc'd and its address reused; the identity check against the live
+        # referent below keeps such a stale entry from blessing an
+        # unrelated array.
         self._issued: dict = {}
         self._issued_sweep_at = 256
+        # zero-copied buffers awaiting their device array's death:
+        # weakref -> (key, raw). Holding raw here keeps the memory alive
+        # for the device alias even after the issued view is dropped.
+        self._deferred: dict = {}
         self._free_bytes = 0
         self.max_bytes = int(max_bytes)
         self.counters = counters
         self.owner_check = owner_check
-        self.allocations = 0   # fresh np.zeros calls (for tests/telemetry)
+        self.allocations = 0   # fresh aligned allocations (tests/telemetry)
         self.trims = 0         # free-list buckets dropped at the byte cap
         self.rejected = 0      # release() calls refused by the guards
+        self.deferred = 0      # defer_release() handoffs (tests/telemetry)
         if counters is not None:
             m = counters.metrics
             m.gauge("pool.free_bytes", fn=lambda: self._free_bytes)
@@ -109,11 +129,31 @@ class BufferPool:
     def _key(shape: tuple, dtype) -> tuple:
         return (tuple(shape), np.dtype(dtype).str)
 
-    def _mark_issued(self, arr: np.ndarray) -> None:
+    @classmethod
+    def _alloc_aligned(cls, shape: tuple, dtype) -> tuple:
+        """Fresh zeroed buffer as a 64B-aligned view over a uint8 backing
+        allocation. Returns ``(view, raw)``; the view keeps ``raw`` alive
+        through its base chain."""
+        dtype = np.dtype(dtype)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        raw = np.zeros(nbytes + cls.ALIGN, np.uint8)
+        off = (-raw.ctypes.data) % cls.ALIGN
+        view = raw[off : off + nbytes].view(dtype).reshape(shape)
+        return view, raw
+
+    @classmethod
+    def _view_of(cls, raw: np.ndarray, key: tuple) -> np.ndarray:
+        shape, dts = key
+        dtype = np.dtype(dts)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        off = (-raw.ctypes.data) % cls.ALIGN
+        return raw[off : off + nbytes].view(dtype).reshape(shape)
+
+    def _mark_issued(self, arr: np.ndarray, raw: np.ndarray) -> None:
         # caller holds self._lock
-        self._issued[id(arr)] = weakref.ref(arr)
+        self._issued[id(arr)] = (weakref.ref(arr), raw)
         if len(self._issued) > self._issued_sweep_at:
-            dead = [k for k, r in self._issued.items() if r() is None]
+            dead = [k for k, (r, _) in self._issued.items() if r() is None]
             for k in dead:
                 del self._issued[k]
             self._issued_sweep_at = max(256, 2 * len(self._issued))
@@ -124,14 +164,14 @@ class BufferPool:
             lst = self._free.get(key)
             if lst:
                 self._free.move_to_end(key)   # bucket is live: keep it young
-                arr = lst.pop()
+                arr, raw = lst.pop()
                 self._free_bytes -= arr.nbytes
-                self._mark_issued(arr)
+                self._mark_issued(arr, raw)
                 return arr
             self.allocations += 1
-        arr = np.zeros(shape, dtype)
+        arr, raw = self._alloc_aligned(shape, dtype)
         with self._lock:
-            self._mark_issued(arr)
+            self._mark_issued(arr, raw)
         return arr
 
     def _reject(self) -> None:
@@ -141,12 +181,21 @@ class BufferPool:
         if self.counters is not None:
             self.counters.bump("pool_release_rejects")
 
+    def _park(self, key: tuple, arr: np.ndarray, raw: np.ndarray) -> None:
+        # caller holds self._lock
+        self._free.setdefault(key, []).append((arr, raw))
+        self._free.move_to_end(key)
+        self._free_bytes += arr.nbytes
+        while self._free_bytes > self.max_bytes and len(self._free) > 1:
+            # drop the stalest bucket (not the one just released into)
+            _, lst = self._free.popitem(last=False)
+            self._free_bytes -= sum(a.nbytes for a, _ in lst)
+            self.trims += 1
+            if self.counters is not None:
+                self.counters.bump("pool_trims")
+
     def release(self, arr) -> None:
-        if (
-            not isinstance(arr, np.ndarray)
-            or arr.base is not None
-            or not arr.flags["C_CONTIGUOUS"]
-        ):
+        if not isinstance(arr, np.ndarray) or not arr.flags["C_CONTIGUOUS"]:
             self._reject()
             return
         if self.owner_check is not None and self.owner_check(arr):
@@ -154,32 +203,66 @@ class BufferPool:
             return
         key = (arr.shape, arr.dtype.str)
         with self._lock:
-            ref = self._issued.get(id(arr))
-            if ref is None or ref() is not arr:
-                # double release, a buffer this pool never issued, or a
-                # stale id from a buffer that was dropped and gc'd
+            ent = self._issued.get(id(arr))
+            if ent is None or ent[0]() is not arr:
+                # double release, a buffer this pool never issued (incl. any
+                # foreign view — pool buffers are views only of their own
+                # aligned backing allocations), or a stale id from a buffer
+                # that was dropped and gc'd
                 accepted = False
             else:
                 accepted = True
                 del self._issued[id(arr)]
-                self._free.setdefault(key, []).append(arr)
-                self._free.move_to_end(key)
-                self._free_bytes += arr.nbytes
-                while (
-                    self._free_bytes > self.max_bytes and len(self._free) > 1
-                ):
-                    # drop the stalest bucket (not the one just released into)
-                    _, lst = self._free.popitem(last=False)
-                    self._free_bytes -= sum(a.nbytes for a in lst)
-                    self.trims += 1
-                    if self.counters is not None:
-                        self.counters.bump("pool_trims")
+                self._park(key, arr, ent[1])
         if not accepted:
             self._reject()
+
+    def defer_release(self, arr) -> bool:
+        """Release a buffer that a zero-copy ``jax.device_put`` is aliasing:
+        the backing allocation is parked on the free list only once the
+        issued view dies — jax retains the exact ndarray it aliased, so the
+        view's death means the device array (and every pending execution
+        reading it) is gone. Returns ``False`` (and counts a reject) for
+        buffers this pool didn't issue."""
+        if not isinstance(arr, np.ndarray):
+            self._reject()
+            return False
+        key = (arr.shape, arr.dtype.str)
+        with self._lock:
+            ent = self._issued.get(id(arr))
+            if ent is None or ent[0]() is not arr:
+                ok = False
+            else:
+                ok = True
+                del self._issued[id(arr)]
+                # keyed by the ref's id — a weakref to an ndarray is not
+                # hashable (hash would delegate to the referent); the entry
+                # holds the ref itself alive so the callback can fire
+                ref = weakref.ref(arr, self._recycle_raw)
+                self._deferred[id(ref)] = (ref, key, ent[1])
+                self.deferred += 1
+        if not ok:
+            self._reject()
+        return ok
+
+    def _recycle_raw(self, ref) -> None:
+        # weakref callback: the zero-copied view died -> recreate it over
+        # the retained backing allocation and park it for reuse
+        with self._lock:
+            ent = self._deferred.pop(id(ref), None)
+            if ent is None:
+                return
+            _, key, raw = ent
+            self._park(key, self._view_of(raw, key), raw)
 
     @property
     def free_bytes(self) -> int:
         return self._free_bytes
+
+    @property
+    def deferred_pending(self) -> int:
+        with self._lock:
+            return len(self._deferred)
 
 
 class DeviceSlotPool:

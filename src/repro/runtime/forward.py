@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,12 +41,24 @@ from repro.core.cache import HostCache
 from repro.core.counters import Counters, PhaseTimer
 from repro.core.plan import PartitionPlan, WorkUnit
 from repro.core.storage import StorageTier
+from repro.kernels.dispatch import KernelDispatch
 from repro.runtime.config import PipelineConfig
 
 
 def act_file(layer: int) -> str:
     """Canonical per-layer activation file name (shared with the engine)."""
     return f"act{layer}"
+
+
+class StackedGather(NamedTuple):
+    """Pallas-path host staging product: whole cached partition blocks
+    memcpy'd back to back (``stack``, a pooled buffer with one zeroed pad
+    row at the end) plus the unit's layer-independent row map ``idx``
+    (``(r_pad,) int32``, cached — NOT pool-owned) such that
+    ``stack[idx] == GA_p`` bitwise."""
+
+    stack: np.ndarray
+    idx: np.ndarray
 
 
 class ForwardRunner:
@@ -64,6 +76,7 @@ class ForwardRunner:
         store_dtype=None,
         act_kind: str = "act",
         act_name: Callable[[int], str] = act_file,
+        kernels: Optional[KernelDispatch] = None,
     ):
         self.spec = spec
         self.plan = plan
@@ -80,11 +93,21 @@ class ForwardRunner:
         self.act_kind = act_kind
         self.act_name = act_name
         self._use_xfer = pipeline.enabled and pipeline.transfer_stage
+        self.kernels = (
+            kernels
+            if kernels is not None
+            else KernelDispatch(pipeline.kernels, counters)
+        )
         # (layer, p) -> keys the prefetch stage actually pinned for that
         # unit; the gather stage pops and releases exactly these (prefetch
         # of a unit strictly precedes its gather via the stage queues)
         self.prefetch_pins: Dict = {}
         self._jit_fwd = {}
+        # Pallas path: per-unit (idx, sizes, total) row maps and their
+        # device-resident copies — layer-independent (plan-derived), so one
+        # H2D per unit for the whole run
+        self._idx_cache: Dict = {}
+        self._idx_dev_cache: Dict = {}
 
     # ------------------------------------------------------------------ jit
     def fwd_fn(self, activate: bool):
@@ -150,6 +173,85 @@ class ForwardRunner:
         with PhaseTimer(self.counters, phase):
             return self.gather(layer, u, u.r_pad)
 
+    # ------------------------------------------------- stacked gather (Pallas)
+    def _unit_idx(self, u: WorkUnit):
+        """Layer-independent row map for the Pallas path: ``idx[i]`` is the
+        stack row holding GA row ``i`` (partition blocks laid back to back
+        in ``u.req_parts`` order); padding rows ``[n_req, r_pad)`` point at
+        the stack's dedicated zeroed row at offset ``total``. Cached per
+        unit — it only depends on the plan."""
+        ent = self._idx_cache.get(u.p)
+        if ent is None:
+            ptr = u.req_part_ptr
+            sizes = []
+            total = 0
+            offs = {}
+            for q in u.req_parts:
+                a0, a1 = self.plan.ro.partition_slice(int(q))
+                offs[int(q)] = total
+                sizes.append(a1 - a0)
+                total += a1 - a0
+            idx = np.full(u.r_pad, total, np.int32)
+            for q in u.req_parts:
+                a0, _ = self.plan.ro.partition_slice(int(q))
+                idx[ptr[q] : ptr[q + 1]] = (
+                    offs[int(q)] + (u.req_global[ptr[q] : ptr[q + 1]] - a0)
+                ).astype(np.int32)
+            ent = (idx, sizes, total)
+            self._idx_cache[u.p] = ent
+        return ent
+
+    def idx_dev(self, u: WorkUnit):
+        """Device-resident copy of the unit's row map (one H2D ever; the
+        host idx is never mutated, so a zero-copy alias is fine)."""
+        dev = self._idx_dev_cache.get(u.p)
+        if dev is None:
+            idx, _, _ = self._unit_idx(u)
+            dev = jax.device_put(idx)
+            dev.block_until_ready()
+            self.counters.bump("h2d_bytes", idx.nbytes)
+            self._idx_dev_cache[u.p] = dev
+        return dev
+
+    def stacked_gather(self, layer: int, u: WorkUnit) -> StackedGather:
+        """Pallas-path host staging: instead of indexing rows out of every
+        cached partition block (the reference :meth:`gather`'s intermediate
+        gathered copy), memcpy the whole blocks back to back into one pooled
+        stack buffer and let the fused device kernel index rows out of the
+        staged stack directly (``gather_rows(stack, idx) == GA_p``
+        bitwise). Contiguous block copies release the GIL and skip the
+        per-row indexing entirely; the row selection moves into the kernel's
+        scalar-prefetched BlockSpec index map."""
+        d = self.dims[layer]
+        idx, sizes, total = self._unit_idx(u)
+        buf = self._rt.pool.acquire((total + 1, d), self.dtype)
+        off = 0
+        for q, sz in zip(u.req_parts, sizes):
+            block = self.cache.get(
+                (self.act_kind, layer, int(q)),
+                loader=partial(self.load_part_block, layer, int(q)),
+                size_hint=self.block_nbytes(layer, int(q)),
+            )
+            if block.dtype == buf.dtype:
+                np.copyto(buf[off : off + sz], block)
+            else:
+                # reduced-precision storage: upcast into the compute buffer
+                buf[off : off + sz] = block
+            off += sz
+        buf[total] = 0   # the pad row every idx >= n_req points at
+        for key in self.prefetch_pins.pop((layer, u.p), ()):
+            self.cache.unpin(key)
+        self.counters.bump(
+            "host_gather_bytes", total * d * self.dtype.itemsize
+        )
+        return StackedGather(buf, idx)
+
+    def stacked_gather_timed(
+        self, layer: int, u: WorkUnit, phase: str
+    ) -> StackedGather:
+        with PhaseTimer(self.counters, phase):
+            return self.stacked_gather(layer, u)
+
     def prefetch_unit(self, layer: int, u: WorkUnit) -> None:
         """Stage-1: make (and keep) the unit's source partitions resident.
         With ``batched_reads`` every missing partition is fetched in ONE
@@ -201,19 +303,54 @@ class ForwardRunner:
         dev.block_until_ready()
         return dev
 
+    def stage_h2d(self, arr: np.ndarray, defer: bool = True):
+        """Stage a pooled host buffer onto the device and hand it back to
+        the pool.
+
+        With ``pipeline.zero_copy_h2d`` (and ``defer``), the staging is a
+        zero-copy ``jax.device_put`` — the pool's buffers are 64-byte
+        aligned, so the XLA CPU backend aliases them instead of copying —
+        and the buffer is returned via :meth:`BufferPool.defer_release`:
+        recycling waits until the device array (and every pending execution
+        reading it) has died, which closes the aliasing hazard the forced
+        ``jnp.array(copy=True)`` used to guard against. If ``device_put``
+        copied anyway (non-CPU backend), jax drops the host view right away
+        and the deferred release fires immediately — the protocol is
+        agnostic to whether aliasing happened.
+
+        ``defer=False`` (snapshot mode's keep-host staging) always copies
+        and leaves the buffer's ownership with the caller."""
+        if defer and self.pipeline.zero_copy_h2d:
+            dev = jax.device_put(arr)
+            dev.block_until_ready()
+            self.counters.bump("h2d_bytes", arr.nbytes)
+            self._rt.pool.defer_release(arr)
+            return dev
+        dev = self.h2d(arr)
+        self.counters.bump("h2d_bytes", arr.nbytes)
+        if defer:
+            self._rt.pool.release(arr)
+        return dev
+
     def _make_transfer_fn(self, keep_host: bool):
         def transfer(u: WorkUnit, ga: np.ndarray, _aux):
             """H2D staging for one forward unit (runs on the transfer
-            thread): copy the gathered buffer onto the device while the
-            previous unit's kernel runs, then recycle the host buffer —
-            unless the driver's ``after_compute`` hook still needs it on
-            the compute loop (snapshot mode)."""
-            dev = self.h2d(ga)
-            self.counters.bump("h2d_bytes", ga.nbytes)
+            thread): stage the gathered buffer onto the device while the
+            previous unit's kernel runs, then hand the host buffer back to
+            the pool — unless the driver's ``after_compute`` hook still
+            needs it on the compute loop (snapshot mode)."""
             if keep_host:
+                dev = self.stage_h2d(ga, defer=False)
                 return (dev, ga), None
-            self._rt.pool.release(ga)
-            return (dev, None), None
+            return (self.stage_h2d(ga), None), None
+
+        return transfer
+
+    def _make_stacked_transfer_fn(self):
+        def transfer(u: WorkUnit, sg: StackedGather, _aux):
+            # stage the partition stack; the row map is already device-
+            # resident after the first epoch touches the unit
+            return (self.stage_h2d(sg.stack), self.idx_dev(u)), None
 
         return transfer
 
@@ -241,31 +378,58 @@ class ForwardRunner:
         rt = self._rt
         use_xfer = self._use_xfer
         keep_host = after_compute is not None
+        # Pallas dispatch: fused stack-consuming forward. Snapshot mode
+        # (keep_host) needs GA materialized on the host for persistence —
+        # exactly the copy the fused path eliminates — so it stays on the
+        # reference host gather (a documented dispatch rule).
+        use_stacked = self.kernels.use_pallas and not keep_host
         t_layer = time.perf_counter()
         name_out = out_name if out_name is not None else self.act_name(l + 1)
         cast = self.store_dtype != self.dtype
-        fwd = self.fwd_fn(activate)
+        if use_stacked:
+            fwd = self.kernels.fused_forward_fn(self.spec, activate)
+            gather_fn = lambda u, _l=l: self.stacked_gather_timed(
+                _l, u, "gather"
+            )
+            transfer_fn = self._make_stacked_transfer_fn()
+        else:
+            fwd = self.fwd_fn(activate)
+            gather_fn = lambda u, _l=l: self.gather_padded(_l, u, "gather")
+            transfer_fn = self._make_transfer_fn(keep_host)
         units = [self.plan.unit(p) for p in self.plan.schedule]
-        gather_fn = lambda u, _l=l: self.gather_padded(_l, u, "gather")
         prefetch_fn = (
             (lambda u, _l=l: self.prefetch_unit(_l, u))
             if self.pipeline.enabled else None
         )
         for u, ga, _ in rt.run_stream(
             units, gather_fn, prefetch_fn,
-            transfer_fn=self._make_transfer_fn(keep_host) if use_xfer else None,
+            transfer_fn=transfer_fn if use_xfer else None,
             wait_stage="compute_wait_fwd",
             xfer_wait_stage="compute_wait_xfer_fwd",
             xfer_up_stage="xfer_wait_up_fwd",
         ):
             with PhaseTimer(self.counters, "compute_fwd"):
-                if use_xfer:
+                if use_stacked:
+                    ga_host = None
+                    if use_xfer:
+                        stack_dev, idx_dev = ga
+                        stack_host = None
+                    else:
+                        stack_host = ga.stack
+                        # aligned pool buffer: asarray aliases; safe because
+                        # the serial path blocks on out before releasing
+                        stack_dev = jnp.asarray(stack_host)
+                        idx_dev = self.idx_dev(u)
+                        self.counters.bump("h2d_bytes", stack_host.nbytes)
+                    out = fwd(params_l, stack_dev, idx_dev, u.topo)
+                elif use_xfer:
                     ga_dev, ga_host = ga
+                    out = fwd(params_l, ga_dev, u.topo)
                 else:
                     ga_host = ga
                     ga_dev = jnp.asarray(ga)
                     self.counters.bump("h2d_bytes", ga.nbytes)
-                out = fwd(params_l, ga_dev, u.topo)
+                    out = fwd(params_l, ga_dev, u.topo)
                 out_dst = out[: u.n_dst]
                 if use_xfer and self.pipeline.async_d2h and not cast:
                     # start the D2H copy now; the retire thread runs the
@@ -281,6 +445,10 @@ class ForwardRunner:
                         out_np = out_np.astype(self.store_dtype)
             if after_compute is not None:
                 after_compute(u, ga_host)
+            if use_stacked and not use_xfer and stack_host is not None:
+                # out was materialized above (serial never async-retires),
+                # so the aliasing device array is no longer read
+                rt.pool.release(stack_host)
             if ga_host is not None and (not use_xfer or keep_host):
                 # the transfer thread recycled the host buffer already
                 # unless it was told to keep it for after_compute

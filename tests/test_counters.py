@@ -108,6 +108,27 @@ def test_snapshot_contains_flattened_maps():
     assert snap["storage_read_bytes"] == 123
 
 
+def test_bump_is_atomic_under_contention():
+    """Regression (engine ∇A write-back): the two host_scatter_bytes sites
+    used a bare ``+=`` on the dataclass attribute — racy once gather workers
+    and the main loop share the instance. ``bump`` must not lose updates."""
+    c = Counters()
+    n_threads, n_iters = 8, 5000
+    start = threading.Barrier(n_threads)
+
+    def _hammer():
+        start.wait()
+        for _ in range(n_iters):
+            c.bump("host_scatter_bytes", 3)
+
+    threads = [threading.Thread(target=_hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.host_scatter_bytes == 3 * n_threads * n_iters
+
+
 def test_snapshot_consistent_under_concurrent_mutation():
     """snapshot() must hold the lock: worker threads mutate the stage maps
     while benches snapshot, and an unlocked read can see a dict mid-resize.

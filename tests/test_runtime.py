@@ -37,8 +37,8 @@ def _setup(n_nodes=900, n_parts=5, d_in=16, seed=0):
 
 def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1,
          gather_workers=1, transfer_stage=True, device_slots=2,
-         async_d2h=True):
-    spec = get_gnn("gcn")
+         async_d2h=True, kernels="auto", zero_copy_h2d=True, model="gcn"):
+    spec = get_gnn(model)
     params = spec.init(jax.random.PRNGKey(0), dims[0], dims[1], dims[-1],
                        len(dims) - 1)
     c = Counters()
@@ -49,7 +49,8 @@ def _run(plan, Xr, Yr, dims, mode, depth, budget_kb=8192, epochs=1,
         pipeline=PipelineConfig(depth=depth, gather_workers=gather_workers,
                                 transfer_stage=transfer_stage,
                                 device_slots=device_slots,
-                                async_d2h=async_d2h),
+                                async_d2h=async_d2h, kernels=kernels,
+                                zero_copy_h2d=zero_copy_h2d),
     )
     eng.initialize(Xr)
     for _ in range(epochs):
@@ -67,13 +68,18 @@ def _assert_trees_identical(a, b):
 
 
 # --------------------------------------------------------- engine equivalence
+@pytest.mark.parametrize("kernels", ["reference", "pallas"])
 @pytest.mark.parametrize("mode", ["regather", "snapshot"])
 @pytest.mark.parametrize("depth", [1, 3])
-def test_pipelined_matches_serial_exactly(mode, depth):
+def test_pipelined_matches_serial_exactly(mode, depth, kernels):
+    """Pipelined == serial bitwise, under BOTH kernel dispatch modes: the
+    baseline stays the serial reference engine, so the pallas rows also pin
+    kernels='pallas' == reference bit-identity (the PR acceptance bar)."""
     plan, Xr, Yr = _setup()
     dims = [16, 24, 8]
     l0, g0, _ = _run(plan, Xr, Yr, dims, mode, depth=0)
-    l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=depth)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=depth,
+                      kernels=kernels)
     assert l0 == l1
     _assert_trees_identical(g0, g1)
     if mode == "regather":
@@ -82,15 +88,17 @@ def test_pipelined_matches_serial_exactly(mode, depth):
         assert c1.cache_prefetches > 0
 
 
+@pytest.mark.parametrize("kernels", ["reference", "pallas"])
 @pytest.mark.parametrize("mode", ["regather", "snapshot"])
-def test_multiworker_gather_matches_serial(mode):
+def test_multiworker_gather_matches_serial(mode, kernels):
     """gather_workers > 1: units complete out of order on the workers, the
     reassembly buffer re-serializes them — loss and grads stay bit-identical
-    to the serial engine in both backward modes."""
+    to the serial engine in both backward modes and both dispatch modes."""
     plan, Xr, Yr = _setup()
     dims = [16, 24, 8]
     l0, g0, _ = _run(plan, Xr, Yr, dims, mode, depth=0)
-    l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=2, gather_workers=3)
+    l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=2, gather_workers=3,
+                      kernels=kernels)
     assert l0 == l1
     _assert_trees_identical(g0, g1)
     # the backward aux stage really ran on workers
@@ -430,17 +438,21 @@ def test_plan_lookahead_and_upcoming_parts():
 
 
 # ------------------------------------------------- device-transfer stage
+@pytest.mark.parametrize("kernels", ["reference", "pallas"])
 @pytest.mark.parametrize("mode", ["regather", "snapshot"])
 @pytest.mark.parametrize("slots", [1, 2])
-def test_transfer_stage_bit_identical(mode, slots):
+def test_transfer_stage_bit_identical(mode, slots, kernels):
     """Satellite: the async H2D/D2H device-transfer stage (at 1 and 2 device
     slots) must not change the math — forward, regather and snapshot
-    backward all stay bit-identical to the serial engine."""
+    backward all stay bit-identical to the serial engine, under both kernel
+    dispatch modes (the pallas rows stage the partition stack + idx instead
+    of the gathered GA buffer)."""
     plan, Xr, Yr = _setup()
     dims = [16, 24, 8]
     l0, g0, _ = _run(plan, Xr, Yr, dims, mode, depth=0)
     l1, g1, c1 = _run(plan, Xr, Yr, dims, mode, depth=2,
-                      transfer_stage=True, device_slots=slots)
+                      transfer_stage=True, device_slots=slots,
+                      kernels=kernels)
     assert l0 == l1
     _assert_trees_identical(g0, g1)
     # H2D staging and D2H retire really ran on the transfer/retire threads
@@ -469,6 +481,20 @@ def test_transfer_stage_sync_d2h_bit_identical():
     l0, g0, _ = _run(plan, Xr, Yr, dims, "regather", depth=0)
     l1, g1, _ = _run(plan, Xr, Yr, dims, "regather", depth=2,
                      async_d2h=False)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+
+
+@pytest.mark.parametrize("kernels", ["reference", "pallas"])
+def test_zero_copy_h2d_off_bit_identical(kernels):
+    """zero_copy_h2d=False forces the pre-PR copying jnp.array staging —
+    the math must not depend on whether device_put aliased the pinned
+    buffer or copied it."""
+    plan, Xr, Yr = _setup(n_nodes=500, n_parts=4)
+    dims = [16, 16, 8]
+    l0, g0, _ = _run(plan, Xr, Yr, dims, "regather", depth=0)
+    l1, g1, _ = _run(plan, Xr, Yr, dims, "regather", depth=2,
+                     kernels=kernels, zero_copy_h2d=False)
     assert l0 == l1
     _assert_trees_identical(g0, g1)
 
