@@ -53,8 +53,8 @@ class EmulatedNVMeTier(StorageTier):
     completion, so the pipeline can genuinely hide it."""
 
     def __init__(self, root, counters=None, latency_us: float = 0.0,
-                 gbps: float = 0.0):
-        super().__init__(root, counters=counters)
+                 gbps: float = 0.0, **kw):
+        super().__init__(root, counters=counters, **kw)
         self.latency_s = latency_us * 1e-6
         self.bytes_per_s = gbps * 1e9
 
@@ -65,20 +65,22 @@ class EmulatedNVMeTier(StorageTier):
         if d > 0:
             time.sleep(d)
 
-    def write_rows(self, name, row0, arr):
+    # delays hang off the raw single-attempt ops, UNDER the tier's retry
+    # layer — a retried op pays the device time again, like real hardware
+    def _write_rows_once(self, name, row0, arr):
         self._delay(arr.nbytes)
-        super().write_rows(name, row0, arr)
+        super()._write_rows_once(name, row0, arr)
 
-    def read_rows(self, name, row0, row1):
-        out = super().read_rows(name, row0, row1)
+    def _read_rows_once(self, name, row0, row1):
+        out = super()._read_rows_once(name, row0, row1)
         self._delay(out.nbytes)
         return out
 
-    def read_rows_batched(self, requests):
+    def _read_rows_batched_once(self, requests):
         # a vectored submission pays the fixed per-op latency ONCE for the
         # whole batch (plus the bandwidth term for the total bytes) — the
         # win the pipeline's batched prefetch is after
-        outs = super().read_rows_batched(requests)
+        outs = super()._read_rows_batched_once(requests)
         if outs:
             self._delay(sum(o.nbytes for o in outs))
         return outs

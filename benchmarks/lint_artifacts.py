@@ -68,6 +68,8 @@ def lint_bench(path: str, doc) -> list:
         errs.append(f"{path}: no result sections beside 'config'")
     if os.path.basename(path).startswith("BENCH_kernel_hotpath"):
         errs += lint_kernel_hotpath(path, doc)
+    if os.path.basename(path).startswith("BENCH_fault_soak"):
+        errs += lint_fault_soak(path, doc)
     return errs
 
 
@@ -105,6 +107,35 @@ def lint_kernel_hotpath(path: str, doc) -> list:
             errs.append(
                 f"{path}: kernels[{i}].fallback.pallas_wins incomplete"
             )
+    return errs
+
+
+def lint_fault_soak(path: str, doc) -> list:
+    """benchmarks/fault_soak.py payload: the fault-tolerance acceptance
+    record — the soak section must carry the bit-identity verdict, the
+    injected-fault accounting that makes the verdict meaningful (a soak
+    that injected nothing proves nothing), and a clean serve lane."""
+    errs = []
+    cfg = doc.get("config", {})
+    for key in ("read_error_rate", "write_error_rate", "depth",
+                "gather_workers", "seed", "epochs"):
+        if key not in cfg:
+            errs.append(f"{path}: config missing '{key}'")
+    soak = doc.get("soak")
+    if not isinstance(soak, dict):
+        return errs + [f"{path}: missing 'soak' result section"]
+    if not isinstance(soak.get("identical"), bool):
+        errs.append(f"{path}: soak.identical missing/not boolean")
+    for key in ("faults_injected", "io_retries", "io_deadline_misses",
+                "serve_lookups", "wall_s"):
+        if not isinstance(soak.get(key), (int, float)):
+            errs.append(f"{path}: soak.{key} missing/not numeric")
+    for key in ("losses_clean", "losses_faulty"):
+        v = soak.get(key)
+        if not isinstance(v, list) or not v:
+            errs.append(f"{path}: soak.{key} missing/empty loss trajectory")
+    if not isinstance(soak.get("serve_errors"), list):
+        errs.append(f"{path}: soak.serve_errors missing/not a list")
     return errs
 
 

@@ -1,6 +1,10 @@
 """GriNNder core: structured storage offloading (cache/(re)gather/bypass)."""
 from repro.core.counters import Counters, PhaseTimer
-from repro.core.storage import StorageIOQueue, StorageTier
+from repro.core.storage import (
+    RetryPolicy, StorageCorruptionError, StorageDeadlineError, StorageError,
+    StorageFullError, StorageIOQueue, StorageTier, TransientIOError,
+)
+from repro.core.faults import FaultPolicy, FaultyTier
 from repro.core.cache import HostCache
 from repro.core.plan import PartitionPlan, WorkUnit, build_plan
 from repro.core.engine import SSOEngine
@@ -12,6 +16,9 @@ from repro.core.microbatch import microbatch_grads, build_full_mfg
 
 __all__ = [
     "Counters", "PhaseTimer", "StorageTier", "StorageIOQueue", "HostCache",
+    "StorageError", "TransientIOError", "StorageCorruptionError",
+    "StorageDeadlineError", "StorageFullError", "RetryPolicy",
+    "FaultPolicy", "FaultyTier",
     "PartitionPlan", "WorkUnit", "build_plan", "SSOEngine",
     "TierBandwidths", "PAPER_WORKSTATION", "modeled_time", "ModeledTime",
     "gnn_epoch_flops",

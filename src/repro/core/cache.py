@@ -227,6 +227,15 @@ class HostCache:
         transient-overshoot fix pins down)."""
         return self._peak
 
+    @property
+    def total_pins(self) -> int:
+        """Sum of pin counts across resident entries. The pipeline unwind
+        contract (runtime/README.md, "Failure semantics") requires this to
+        return to zero after a faulted epoch — the deadlock regression
+        suite asserts it."""
+        with self._lock:
+            return sum(e.pinned for e in self._entries.values())
+
     def get(
         self,
         key: Key,

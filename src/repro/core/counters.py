@@ -58,6 +58,9 @@ class Counters:
     pool_release_rejects: int = 0  # release() calls refused by the guards
     # device compute (flop estimate filled by engine when available)
     device_flops: int = 0
+    # fault tolerance (repro/core/faults.py + runtime unwind paths)
+    threads_leaked: int = 0   # pipeline/I-O threads that outlived join timeout
+    slow_lane_pins: int = 0   # prefetches forced cache-resident by slow lane
 
     # soft cap on retained memory-timeline samples: past this the timeline
     # is decimated in place (every 2nd sample dropped, sampling stride

@@ -427,6 +427,7 @@ class SSOEngine:
         for u, lg, _ in rt.run_stream(
             units, loss_fetch,
             transfer_fn=loss_transfer if use_xfer else None,
+            cleanup_fn=self.fwd_runner._cleanup_stream,
             gather_stage="loss_fetch", wait_stage="compute_wait_loss",
             xfer_wait_stage="compute_wait_xfer_loss",
             xfer_up_stage="xfer_wait_up_loss",
@@ -520,6 +521,7 @@ class SSOEngine:
             for u, ga, d_out in rt.run_stream(
                 units, gather_fn, prefetch_fn, aux_fn=aux_fn,
                 transfer_fn=bwd_transfer if use_xfer else None,
+                cleanup_fn=self.fwd_runner._cleanup_stream,
                 prefetch_stage=prefetch_stage, gather_stage=gather_stage,
                 aux_stage="grad_fetch", wait_stage="compute_wait_bwd",
                 xfer_wait_stage="compute_wait_xfer_bwd",
@@ -597,9 +599,17 @@ class SSOEngine:
     # ----------------------------------------------------------------- step
     def run_epoch(self, params: List, labels_reordered: np.ndarray):
         t0 = time.perf_counter()
-        with PhaseTimer(self.counters, "epoch"):
-            self.forward(params)
-            loss, grads = self.backward(params, labels_reordered)
+        try:
+            with PhaseTimer(self.counters, "epoch"):
+                self.forward(params)
+                loss, grads = self.backward(params, labels_reordered)
+        except BaseException:
+            # faulted epoch (fatal storage error, stage crash): the stream's
+            # own unwind released stranded buffers; drop any pins taken by
+            # prefetches whose gather never ran so cache pins return to zero
+            # and the engine stays closeable
+            self.fwd_runner.release_pins()
+            raise
         # one structured line per epoch (repro.obs logger; silent unless
         # logging is configured): stall top-3, cache hit rate, read amp
         self._summarizer.log_epoch(time.perf_counter() - t0)

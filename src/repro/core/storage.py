@@ -19,10 +19,13 @@ services a FIFO of read/write requests with byte-based write backpressure.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import dataclasses
+import logging
 import os
 import shutil
 import threading
 import time
+import zlib
 from collections import deque
 from typing import Dict, Optional, Tuple
 
@@ -32,6 +35,55 @@ from repro.core.counters import Counters
 
 PAGE_BYTES = 16 * 1024  # NVMe page granularity used throughout the paper
 
+_log = logging.getLogger("repro.storage")
+
+
+# -- exception taxonomy ------------------------------------------------------
+class StorageError(IOError):
+    """Base for every typed storage failure. Anything that is *not* a
+    :class:`TransientIOError` is fatal: it propagates out of the retry
+    layer, poisons the pipeline queues, and unwinds ``run_stream``."""
+
+
+class TransientIOError(StorageError):
+    """A fault expected to succeed on retry (EIO blip, torn write that can
+    be re-issued, device timeout). The retry layer absorbs these with
+    bounded exponential backoff."""
+
+
+class StorageCorruptionError(StorageError):
+    """Checksum mismatch between a read row and its CRC32 sidecar — a torn
+    write that was never retried, or bit rot. The retry layer re-reads
+    once (transient bus/DMA corruption recovers); a second mismatch means
+    the data at rest is bad and the error is fatal."""
+
+
+class StorageDeadlineError(StorageError):
+    """Retry budget or per-op deadline exhausted while a fault stayed
+    transient. Fatal: the lane is effectively down."""
+
+
+class StorageFullError(StorageError):
+    """ENOSPC — no retry can help; fatal immediately."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-exponential-backoff schedule for transient storage faults.
+
+    An op is attempted up to ``1 + max_retries`` times and must finish
+    within ``op_deadline_s`` wall-clock (attempts + backoff sleeps);
+    exceeding either raises :class:`StorageDeadlineError` chained to the
+    last transient error. Corruption is handled separately: up to
+    ``corruption_rereads`` re-reads before the mismatch becomes fatal."""
+
+    max_retries: int = 8
+    backoff_s: float = 0.002
+    backoff_mult: float = 2.0
+    backoff_max_s: float = 0.25
+    op_deadline_s: float = 10.0
+    corruption_rereads: int = 1
+
 
 class StorageTier:
     def __init__(
@@ -39,14 +91,29 @@ class StorageTier:
         root: str,
         counters: Optional[Counters] = None,
         page_bytes: int = PAGE_BYTES,
+        verify_reads: bool = False,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.root = root
         self.page = page_bytes
         self.counters = counters or Counters()
+        self.verify_reads = bool(verify_reads)
+        self.retry = retry
         self._arrays: Dict[str, np.memmap] = {}
         self._meta: Dict[str, Tuple[tuple, np.dtype]] = {}
+        # CRC32 sidecars (verify_reads only): per-row checksum + a validity
+        # mask of rows that have been written through write_rows. The CRC is
+        # recorded BEFORE the memmap assignment, so a torn write leaves a
+        # fresh CRC over stale/partial data — exactly what read verification
+        # must catch.
+        self._crc: Dict[str, np.ndarray] = {}
+        self._crc_ok: Dict[str, np.ndarray] = {}
         self._alloc_bytes = 0
         self._lock = threading.Lock()
+        m = self.counters.metrics
+        self._m_retries = m.counter("io.retries")
+        self._m_deadline = m.counter("io.deadline_misses")
+        self._m_rereads = m.counter("io.corruption_rereads")
         os.makedirs(root, exist_ok=True)
 
     # -- lifecycle ----------------------------------------------------------
@@ -62,6 +129,10 @@ class StorageTier:
                 self._alloc_bytes -= int(np.prod(old[0])) * old[1].itemsize
             self._arrays[name] = mm
             self._meta[name] = (shape, dtype)
+            if self.verify_reads:
+                n_rows = int(shape[0]) if len(shape) else 0
+                self._crc[name] = np.zeros(n_rows, dtype=np.uint32)
+                self._crc_ok[name] = np.zeros(n_rows, dtype=bool)
             self._alloc_bytes += int(np.prod(shape)) * dtype.itemsize
             self.counters.sample_storage_alloc(self._alloc_bytes)
 
@@ -75,6 +146,8 @@ class StorageTier:
             mm = self._arrays.pop(name)
             del mm
             shape, dtype = self._meta.pop(name)
+            self._crc.pop(name, None)
+            self._crc_ok.pop(name, None)
             self._alloc_bytes -= int(np.prod(shape)) * dtype.itemsize
         try:
             os.remove(self._path(name))
@@ -98,6 +171,8 @@ class StorageTier:
         with self._lock:
             self._arrays.clear()
             self._meta.clear()
+            self._crc.clear()
+            self._crc_ok.clear()
             self._alloc_bytes = 0
         shutil.rmtree(self.root, ignore_errors=True)
 
@@ -105,9 +180,126 @@ class StorageTier:
     def _paged(self, nbytes: int) -> int:
         return ((nbytes + self.page - 1) // self.page) * self.page
 
-    def write_rows(self, name: str, row0: int, arr: np.ndarray) -> None:
+    # -- checksum sidecars --------------------------------------------------
+    def _record_crcs(self, name: str, row0: int, arr: np.ndarray) -> None:
+        crc = self._crc.get(name)
+        if crc is None:
+            return
+        n = int(arr.shape[0])
+        for i in range(n):
+            crc[row0 + i] = zlib.crc32(np.ascontiguousarray(arr[i]).tobytes())
+        self._crc_ok[name][row0 : row0 + n] = True
+
+    def _verify_rows(self, name: str, rows, arr: np.ndarray) -> None:
+        """Check each returned row against its sidecar CRC. ``rows`` is an
+        iterable of absolute row indices aligned with ``arr``'s first axis;
+        rows never written through ``write_rows`` (mask False) are skipped."""
+        crc = self._crc.get(name)
+        if crc is None:
+            return
+        ok = self._crc_ok[name]
+        for i, r in enumerate(rows):
+            r = int(r)
+            if not ok[r]:
+                continue
+            got = zlib.crc32(np.ascontiguousarray(arr[i]).tobytes())
+            if got != int(crc[r]):
+                raise StorageCorruptionError(
+                    f"CRC mismatch in {name!r} row {r}: "
+                    f"read {got:#010x}, expected {int(crc[r]):#010x} "
+                    "(torn write or bit flip)"
+                )
+
+    # -- retry layer --------------------------------------------------------
+    def _reliable(self, kind: str, fn, verify=None):
+        """Run one storage op with the tier's :class:`RetryPolicy`.
+
+        - :class:`TransientIOError` → bounded exponential backoff, up to
+          ``max_retries`` attempts within ``op_deadline_s``; exhaustion
+          raises :class:`StorageDeadlineError` (and counts a deadline miss).
+        - :class:`StorageCorruptionError` (from ``verify``) → re-read up to
+          ``corruption_rereads`` times, then fatal.
+        - anything else propagates immediately (fatal).
+
+        This sits at the *tier* so every caller is covered — gather workers
+        and the serving path call the tier directly, bypassing the
+        :class:`StorageIOQueue`."""
+        pol = self.retry
+        tracer = self.counters.tracer
+        t0 = time.perf_counter()
+        attempts = 0
+        rereads = 0
+        backoff = pol.backoff_s if pol is not None else 0.0
+        while True:
+            try:
+                out = fn()
+                if verify is not None:
+                    verify(out)
+                return out
+            except TransientIOError as e:
+                if pol is None:
+                    raise
+                attempts += 1
+                elapsed = time.perf_counter() - t0
+                if attempts > pol.max_retries or (
+                    pol.op_deadline_s is not None
+                    and elapsed + backoff > pol.op_deadline_s
+                ):
+                    self._m_deadline.inc()
+                    if tracer.enabled:
+                        tracer.instant(f"fault:deadline:{kind}",
+                                       args={"attempts": attempts,
+                                             "elapsed_s": round(elapsed, 4)})
+                    raise StorageDeadlineError(
+                        f"{kind} gave up after {attempts} attempts / "
+                        f"{elapsed:.3f}s: {e}"
+                    ) from e
+                self._m_retries.inc()
+                if tracer.enabled:
+                    with tracer.span(f"retry:{kind}",
+                                     args={"attempt": attempts}):
+                        time.sleep(backoff)
+                else:
+                    time.sleep(backoff)
+                backoff = min(backoff * pol.backoff_mult, pol.backoff_max_s)
+            except StorageCorruptionError:
+                max_rr = (pol.corruption_rereads if pol is not None else 1)
+                rereads += 1
+                if rereads > max_rr:
+                    raise
+                self._m_rereads.inc()
+                if tracer.enabled:
+                    tracer.instant(f"fault:corruption_reread:{kind}",
+                                   args={"reread": rereads})
+
+    # -- raw single-attempt ops (subclass injection points) -----------------
+    def _write_rows_once(self, name: str, row0: int, arr: np.ndarray) -> None:
+        # CRC first (see __init__): a tear between the two steps is
+        # detectable because the sidecar no longer matches the bytes at rest.
+        self._record_crcs(name, row0, arr)
         mm = self._arrays[name]
         mm[row0 : row0 + arr.shape[0]] = arr
+
+    def _read_rows_once(self, name: str, row0: int, row1: int) -> np.ndarray:
+        mm = self._arrays[name]
+        return np.array(mm[row0:row1])  # copy out of the mapping
+
+    def _read_rows_batched_once(self, requests) -> list:
+        outs = []
+        for name, row0, row1 in requests:
+            mm = self._arrays[name]
+            outs.append(np.array(mm[row0:row1]))
+        return outs
+
+    def _read_rows_scattered_once(self, name: str,
+                                  rows: np.ndarray) -> np.ndarray:
+        mm = self._arrays[name]
+        return np.array(mm[rows])
+
+    # -- public (reliable, accounted) ops -----------------------------------
+    def write_rows(self, name: str, row0: int, arr: np.ndarray) -> None:
+        self._reliable("write",
+                       lambda: self._write_rows_once(name, row0, arr))
         nb = arr.nbytes
         c = self.counters
         with self._lock:
@@ -116,8 +308,12 @@ class StorageTier:
             c.storage_write_ops += 1
 
     def read_rows(self, name: str, row0: int, row1: int) -> np.ndarray:
-        mm = self._arrays[name]
-        out = np.array(mm[row0:row1])  # copy out of the mapping
+        verify = None
+        if self.verify_reads:
+            verify = lambda a: self._verify_rows(name, range(row0, row1), a)
+        out = self._reliable(
+            "read", lambda: self._read_rows_once(name, row0, row1), verify
+        )
         nb = out.nbytes
         c = self.counters
         with self._lock:
@@ -135,18 +331,24 @@ class StorageTier:
         per range (the ranges are discontiguous, so each one is rounded to
         page granularity separately). This is what the pipeline's prefetch
         stage issues per work unit instead of one ``read_rows`` per source
-        partition.
+        partition. A transient fault re-issues the whole batch.
         """
-        outs = []
+        requests = list(requests)
+        if not requests:
+            return []
+        verify = None
+        if self.verify_reads:
+            def verify(outs):
+                for (name, row0, row1), out in zip(requests, outs):
+                    self._verify_rows(name, range(row0, row1), out)
+        outs = self._reliable(
+            "read_batch", lambda: self._read_rows_batched_once(requests),
+            verify,
+        )
         nb = paged = 0
-        for name, row0, row1 in requests:
-            mm = self._arrays[name]
-            out = np.array(mm[row0:row1])
-            outs.append(out)
+        for out in outs:
             nb += out.nbytes
             paged += self._paged(out.nbytes)
-        if not outs:
-            return outs
         c = self.counters
         with self._lock:
             c.storage_read_bytes += nb
@@ -161,8 +363,13 @@ class StorageTier:
         modelling read amplification. Used by the vertex-wise cache baseline
         (Appendix F comparison).
         """
-        mm = self._arrays[name]
-        out = np.array(mm[rows])
+        verify = None
+        if self.verify_reads:
+            verify = lambda a: self._verify_rows(name, rows, a)
+        out = self._reliable(
+            "read_scattered",
+            lambda: self._read_rows_scattered_once(name, rows), verify,
+        )
         if len(rows) == 0:
             # nothing was touched on the device: no ops, no paged bytes
             return out
@@ -197,10 +404,31 @@ class StorageIOQueue:
         tier: StorageTier,
         max_inflight_bytes: int = 64 << 20,
         counters: Optional[Counters] = None,
+        op_deadline_s: Optional[float] = None,
+        slow_lane_factor: float = 4.0,
+        slow_lane_min_ops: int = 16,
+        slow_lane_recovery_ops: int = 32,
     ):
         self.tier = tier
         self.max_inflight = int(max_inflight_bytes)
         self.counters = counters or tier.counters
+        # end-to-end (submit → completion) deadline observation; the tier's
+        # RetryPolicy enforces per-attempt budgets, this watches total queue
+        # wait + service time and counts misses for the obs layer
+        self.op_deadline_s = op_deadline_s
+        # EWMA slow-lane detection: an op whose service latency exceeds
+        # slow_lane_factor × the running EWMA (after a min_ops warmup)
+        # flags the lane slow; slow_lane_recovery_ops consecutive
+        # non-outlier ops clear it. Consumers (ForwardRunner) respond by
+        # forcing prefetched blocks cache-resident so the slow device is
+        # not re-read for data the host already holds.
+        self.slow_lane = False
+        self._slow_factor = float(slow_lane_factor)
+        self._slow_min_ops = int(slow_lane_min_ops)
+        self._slow_recovery_ops = int(slow_lane_recovery_ops)
+        self._lat_ewma = 0.0
+        self._lat_n = 0
+        self._slow_recover = 0
         self._cond = threading.Condition()
         self._q: deque = deque()
         self._inflight_bytes = 0
@@ -221,6 +449,8 @@ class StorageIOQueue:
         m.gauge("storage.io_inflight_bytes", fn=lambda: self._inflight_bytes)
         self._read_lat = m.histogram("storage.read_seconds")
         self._write_lat = m.histogram("storage.write_seconds")
+        self._m_deadline = m.counter("io.deadline_misses")
+        self._m_slow_flips = m.counter("io.slow_lane_flips")
         self._thread = threading.Thread(
             target=self._run, name="sso-io", daemon=True
         )
@@ -257,7 +487,8 @@ class StorageIOQueue:
                 if self._exc is not None:
                     raise self._exc
             fut: cf.Future = cf.Future()
-            self._q.append(("w", (name, row0, arr), fut))
+            self._q.append(("w", (name, row0, arr), fut,
+                            time.perf_counter()))
             self._inflight_bytes += nb
             self._inflight_ops += 1
             self._inflight_write_ids.add(id(arr))
@@ -285,7 +516,8 @@ class StorageIOQueue:
                 # it would silently return stale data
                 raise self._exc
             fut: cf.Future = cf.Future()
-            self._q.append(("r", (name, row0, row1), fut))
+            self._q.append(("r", (name, row0, row1), fut,
+                            time.perf_counter()))
             self._inflight_ops += 1
             self._cond.notify_all()
         return fut
@@ -300,7 +532,8 @@ class StorageIOQueue:
             if self._exc is not None:
                 raise self._exc
             fut: cf.Future = cf.Future()
-            self._q.append(("rb", list(requests), fut))
+            self._q.append(("rb", list(requests), fut,
+                            time.perf_counter()))
             self._inflight_ops += 1
             self._cond.notify_all()
         return fut
@@ -314,7 +547,7 @@ class StorageIOQueue:
                 item = self._q.popleft()
             if item is StorageIOQueue._CLOSE:
                 return
-            kind, payload, fut = item
+            kind, payload, fut, t_submit = item
             t0 = time.perf_counter()
             try:
                 if kind == "w":
@@ -335,6 +568,16 @@ class StorageIOQueue:
                 fut.set_exception(e)
                 continue
             dt = time.perf_counter() - t0
+            self._observe_latency(dt)
+            if self.op_deadline_s is not None:
+                total = time.perf_counter() - t_submit
+                if total > self.op_deadline_s:
+                    self._m_deadline.inc()
+                    if self.counters.tracer.enabled:
+                        self.counters.tracer.instant(
+                            "fault:deadline_miss",
+                            args={"kind": kind, "total_s": round(total, 4)},
+                        )
             if kind == "w":
                 self._write_lat.observe(dt)
                 args = None
@@ -359,6 +602,37 @@ class StorageIOQueue:
                 self._cond.notify_all()
             fut.set_result(res)
 
+    def _observe_latency(self, dt: float) -> None:
+        """EWMA slow-lane detector (service thread only — no lock needed
+        beyond the GIL; ``slow_lane`` is a plain bool read by consumers)."""
+        if self._lat_n >= self._slow_min_ops and \
+                dt > self._slow_factor * max(self._lat_ewma, 1e-9):
+            if not self.slow_lane:
+                self.slow_lane = True
+                self._m_slow_flips.inc()
+                if self.counters.tracer.enabled:
+                    self.counters.tracer.instant(
+                        "fault:slow_lane",
+                        args={"latency_s": round(dt, 5),
+                              "ewma_s": round(self._lat_ewma, 5)},
+                    )
+            self._slow_recover = 0
+            # don't fold the outlier into the EWMA — it would mask a
+            # second spike right behind the first
+            return
+        if self.slow_lane:
+            self._slow_recover += 1
+            if self._slow_recover >= self._slow_recovery_ops:
+                self.slow_lane = False
+                self._slow_recover = 0
+                if self.counters.tracer.enabled:
+                    self.counters.tracer.instant("fault:slow_lane_recovered")
+        self._lat_n += 1
+        if self._lat_n == 1:
+            self._lat_ewma = dt
+        else:
+            self._lat_ewma = 0.9 * self._lat_ewma + 0.1 * dt
+
     # -- barriers -----------------------------------------------------------
     def drain(self) -> None:
         """Block until every submitted request has been serviced."""
@@ -374,13 +648,27 @@ class StorageIOQueue:
             self.counters.record_stall("write_drain", stall)
 
     def close(self) -> None:
-        """Flush all pending writes, then stop the I/O thread."""
+        """Flush all pending writes, then stop the I/O thread.
+
+        A pending fatal I/O error surfaced by the drain re-raises *after*
+        the service thread has been told to stop — shutdown always
+        completes, and a thread that fails to exit within the join timeout
+        is surfaced as a ``threads_leaked`` count plus a warning instead of
+        silently leaking."""
         with self._cond:
             if self._closed:
                 return
             self._closed = True
-        self.drain()
-        with self._cond:
-            self._q.append(StorageIOQueue._CLOSE)
-            self._cond.notify_all()
-        self._thread.join(timeout=5)
+        try:
+            self.drain()
+        finally:
+            with self._cond:
+                self._q.append(StorageIOQueue._CLOSE)
+                self._cond.notify_all()
+            self._thread.join(timeout=5)
+            if self._thread.is_alive():
+                _log.warning(
+                    "storage I/O thread %s leaked (wedged op?)",
+                    self._thread.name,
+                )
+                self.counters.bump("threads_leaked")

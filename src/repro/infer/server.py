@@ -185,6 +185,17 @@ class EmbeddingServer:
             p99_ms=lat["p99"] * 1e3,
             mean_ms=lat["mean"] * 1e3,
         )
+        # fault-tolerance visibility: how hard the storage lane is fighting
+        # under this serving load (populated when the tier injects/retries;
+        # zero on a healthy lane)
+        m = self.counters.metrics
+        for key, name in (
+            ("io_retries", "io.retries"),
+            ("io_faults_injected", "io.faults_injected"),
+            ("io_deadline_misses", "io.deadline_misses"),
+        ):
+            inst = m.get(name)
+            out[key] = float(inst.value) if inst is not None else 0.0
         return out
 
     # ------------------------------------------------------------- lifecycle

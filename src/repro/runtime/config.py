@@ -91,6 +91,18 @@ class PipelineConfig:
     trace_ring_events
         Capacity of the trace ring; once full, the oldest events are
         dropped (the export notes how many under ``otherData``).
+    thread_join_timeout_s
+        How long teardown waits for each pipeline/retire thread before
+        declaring it leaked (logged + counted as ``threads_leaked``) and
+        unwinding anyway — the bound on ``run_stream``'s "clean raise,
+        never a hang" guarantee when a worker is wedged inside a stuck
+        storage op.
+    slow_lane_pin
+        Degradation response to the I/O queue's EWMA slow-lane flag: while
+        the storage lane is flagged slow, prefetched partition blocks are
+        forced cache-resident (pinned) even when ``pin_prefetched`` is off,
+        so the slow device is not re-read for data the host already holds.
+        Counted per forced pin as ``slow_lane_pins``.
     """
 
     depth: int = 0
@@ -109,6 +121,8 @@ class PipelineConfig:
     zero_copy_h2d: bool = True
     trace: Optional[str] = None
     trace_ring_events: int = 1 << 18
+    thread_join_timeout_s: float = 5.0
+    slow_lane_pin: bool = True
 
     @property
     def enabled(self) -> bool:

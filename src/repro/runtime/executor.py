@@ -37,6 +37,7 @@ dropped on overflow) so multi-epoch runs don't pin their peak footprint.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 import weakref
@@ -52,6 +53,8 @@ from repro.runtime.config import PipelineConfig
 from repro.runtime.queues import (
     DONE, PipelineAbort, ReassemblyBuffer, StageQueue,
 )
+
+_log = logging.getLogger("repro.runtime")
 
 
 class BufferPool:
@@ -264,6 +267,16 @@ class BufferPool:
         with self._lock:
             return len(self._deferred)
 
+    @property
+    def outstanding(self) -> int:
+        """Issued buffers still alive and unreleased (dead referents — e.g.
+        buffers dropped on an aborted pipeline and since gc'd — don't
+        count). The deadlock regression suite asserts this returns to zero
+        after a faulted ``run_stream``."""
+        with self._lock:
+            return sum(1 for r, _ in self._issued.values()
+                       if r() is not None)
+
 
 class DeviceSlotPool:
     """Counted device-side staging slots for the transfer stage.
@@ -454,6 +467,7 @@ class PipelineExecutor:
         prefetch_fn: Optional[Callable] = None,
         aux_fn: Optional[Callable] = None,
         transfer_fn: Optional[Callable] = None,
+        cleanup_fn: Optional[Callable] = None,
         prefetch_stage: str = "prefetch",
         gather_stage: str = "gather",
         aux_stage: str = "aux_fetch",
@@ -486,6 +500,18 @@ class PipelineExecutor:
         ``aux_stage`` / ``h2d`` busy — phase-specific names let
         :meth:`Counters.overlap_summary` split forward from backward
         overlap and report the transfer stage's own overlapped fraction.
+
+        Failure semantics (runtime/README.md): an exception in any worker
+        stage sets the shared abort event — every queue/buffer wait is
+        abort-aware, so all stages unwind instead of deadlocking — and the
+        first error re-raises here after the workers are joined. Workers
+        that outlive ``cfg.thread_join_timeout_s`` (wedged in a stuck I/O
+        op) are *counted* (``threads_leaked``) and logged, never silently
+        dropped. ``cleanup_fn(item, buf, aux)`` is then invoked for every
+        in-flight unit stranded in the reassembly buffer, the transfer
+        queue, or a worker's hands (gathered/staged but not yet handed to
+        the next queue when the abort hit)
+        so pooled buffers and pins are returned even on a faulted epoch.
         """
         items = list(items)
         use_xfer = transfer_fn is not None and self.cfg.transfer_stage
@@ -536,7 +562,18 @@ class PipelineExecutor:
                 errors.append(e)
                 abort.set()
 
+        def _unit_cleanup(unit):
+            """Return a stage's in-hand unit (gathered but not handed to
+            the next queue when the abort hit) through ``cleanup_fn``."""
+            if unit is None or cleanup_fn is None:
+                return
+            try:
+                cleanup_fn(*unit)
+            except Exception:
+                _log.exception("cleanup_fn failed during unwind")
+
         def _gather_worker():
+            inhand = None
             try:
                 while True:
                     x = q_ready.get()
@@ -545,6 +582,7 @@ class PipelineExecutor:
                     seq, it = x
                     t0 = time.perf_counter()
                     buf = gather_fn(it)
+                    inhand = (it, buf, None)
                     dt = time.perf_counter() - t0
                     args = {"part": _part(it)} if tracer.enabled else None
                     c.record_busy(gather_stage, dt, args=args)
@@ -552,14 +590,21 @@ class PipelineExecutor:
                     if aux_fn is not None:
                         t0 = time.perf_counter()
                         aux = aux_fn(it)
+                        inhand = (it, buf, aux)
                         c.record_busy(aux_stage, time.perf_counter() - t0,
                                       args=args)
                     reasm.put(seq, (it, buf, aux))
+                    # ownership handed downstream; drop the stale bindings
+                    # too — a retained traceback must not pin a buffer the
+                    # pool has since reissued
+                    inhand = buf = aux = None
             except PipelineAbort:
                 pass
             except BaseException as e:
                 errors.append(e)
                 abort.set()
+            finally:
+                _unit_cleanup(inhand)
 
         threads = [
             threading.Thread(
@@ -580,21 +625,29 @@ class PipelineExecutor:
             q_dev = StageQueue("xfer_out", slots.n, c, abort)
 
             def _transfer_worker():
+                inhand = None
                 try:
                     for seq in range(len(items)):
                         it, buf, aux = reasm.get(seq, stall_name=xfer_up_stage)
+                        inhand = (it, buf, aux)
                         slot = slots.acquire()
                         t0 = time.perf_counter()
                         buf, aux = transfer_fn(it, buf, aux)
+                        # transfer_fn took ownership of the host buffers;
+                        # from here the unit is the staged replacement pair
+                        inhand = (it, buf, aux)
                         dt = time.perf_counter() - t0
                         args = {"part": _part(it)} if tracer.enabled else None
                         c.record_busy("h2d", dt, args=args)
                         q_dev.put((it, buf, aux, slot))
+                        inhand = buf = aux = None  # handed downstream
                 except PipelineAbort:
                     pass
                 except BaseException as e:
                     errors.append(e)
                     abort.set()
+                finally:
+                    _unit_cleanup(inhand)
 
             threads.append(
                 threading.Thread(
@@ -617,19 +670,40 @@ class PipelineExecutor:
                     # the unit's device inputs are consumed: free its slot so
                     # the transfer thread can stage the next-but-one unit
                     slots.release(slot)
+                    buf = aux = None  # consumer owns it; drop stale bindings
                 else:
                     try:
                         it, buf, aux = reasm.get(seq, stall_name=wait_stage)
                     except PipelineAbort:
                         break
                     yield it, buf, aux
+                    buf = aux = None
                 if tracer.enabled:
                     # unit consumed: close its prefetch->compute span
                     tracer.end(f"unit:{gather_stage}", f"{sid}.{seq}")
         finally:
             abort.set()
             for t in threads:
-                t.join(timeout=5)
+                t.join(timeout=self.cfg.thread_join_timeout_s)
+            for t in threads:
+                if t.is_alive():
+                    _log.warning(
+                        "pipeline stage thread %s leaked after %.1fs join "
+                        "timeout (wedged I/O op?)",
+                        t.name, self.cfg.thread_join_timeout_s,
+                    )
+                    c.bump("threads_leaked")
+            if cleanup_fn is not None:
+                stranded = list(reasm.drain_remaining())
+                if q_dev is not None:
+                    for x in q_dev.drain_remaining():
+                        it, buf, aux, _slot = x
+                        stranded.append((it, buf, aux))
+                for it, buf, aux in stranded:
+                    try:
+                        cleanup_fn(it, buf, aux)
+                    except Exception:
+                        _log.exception("cleanup_fn failed during unwind")
             if errors:
                 raise errors[0]
 
@@ -648,6 +722,12 @@ class PipelineExecutor:
             if t is not None:
                 with self._retire_cond:
                     self._retire_cond.notify_all()
-                t.join(timeout=5)
+                t.join(timeout=self.cfg.thread_join_timeout_s)
+                if t.is_alive():
+                    _log.warning(
+                        "D2H retire thread %s leaked after %.1fs join "
+                        "timeout", t.name, self.cfg.thread_join_timeout_s,
+                    )
+                    self.counters.bump("threads_leaked")
             if self._writer is not None:
                 self._writer.close()

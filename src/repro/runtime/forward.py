@@ -259,6 +259,15 @@ class ForwardRunner:
         sizes are passed so the cache reserves room BEFORE the blocks are
         materialized (host memory never transiently exceeds the budget)."""
         pin = self.pipeline.pin_prefetched
+        if not pin and self.pipeline.slow_lane_pin:
+            # degradation: while the storage lane is flagged slow (EWMA
+            # latency spike on the I/O queue), force this unit's blocks
+            # cache-resident so the slow device isn't re-read for data the
+            # host already holds
+            w = getattr(self._rt, "writer", None)
+            if w is not None and w.slow_lane:
+                pin = True
+                self.counters.bump("slow_lane_pins")
         keys = [(self.act_kind, layer, int(q)) for q in u.req_parts]
         if self.pipeline.batched_reads:
             name = self.act_name(layer)
@@ -288,6 +297,44 @@ class ForwardRunner:
                     pinned.append(key)
         if pinned:
             self.prefetch_pins[(layer, u.p)] = pinned
+
+    # ------------------------------------------------------- fault unwinding
+    def release_pins(self) -> None:
+        """Unwind path: unpin every prefetched block whose gather never ran
+        (aborted pipeline). Idempotent; called after the stage threads are
+        joined, so no gather is concurrently popping entries."""
+        while self.prefetch_pins:
+            try:
+                _, keys = self.prefetch_pins.popitem()
+            except KeyError:  # pragma: no cover - raced with a live gather
+                break
+            for key in keys:
+                self.cache.unpin(key)
+
+    def release_gather(self, obj) -> None:
+        """Unwind path: hand any stranded gather product back to the buffer
+        pool. Handles every shape the stream stages carry — pooled ndarrays,
+        :class:`StackedGather` (only ``stack`` is pool-owned), and
+        post-transfer tuples (device arrays are skipped; the pool's release
+        guards make an over-eager call on a non-pool object a counted no-op).
+        """
+        if obj is None:
+            return
+        if isinstance(obj, StackedGather):
+            self._rt.pool.release(obj.stack)
+            return
+        if isinstance(obj, tuple):
+            for o in obj:
+                self.release_gather(o)
+            return
+        if isinstance(obj, np.ndarray):
+            self._rt.pool.release(obj)
+
+    def _cleanup_stream(self, _u, buf, aux) -> None:
+        """``run_stream`` cleanup_fn: release the pooled buffers of a unit
+        stranded in flight when the pipeline unwound."""
+        self.release_gather(buf)
+        self.release_gather(aux)
 
     # ----------------------------------------------------- transfer staging
     @staticmethod
@@ -401,9 +448,39 @@ class ForwardRunner:
             (lambda u, _l=l: self.prefetch_unit(_l, u))
             if self.pipeline.enabled else None
         )
+        try:
+            self._run_layer_stream(
+                l, params_l, fwd, activate, after_compute, name_out, cast,
+                units, gather_fn, prefetch_fn, transfer_fn, use_xfer,
+                use_stacked, keep_host,
+            )
+        except BaseException:
+            # faulted epoch: pins taken by prefetches whose gather never ran
+            # must not outlive the stream (HostCache pins return to zero —
+            # the deadlock regression suite's contract)
+            self.release_pins()
+            raise
+        # barrier: the next layer reads name_out — all writes must be down
+        # (drain_writes retires pending D2H copies first)
+        rt.drain_writes()
+        # the output layer was just rewritten: cached blocks of it (loaded
+        # by a previous epoch's gathers) are stale — drop before any reader
+        self.cache.drop_layer(self.act_kind, l + 1, flush=False)
+        tracer = self.counters.tracer
+        if tracer.enabled:
+            tracer.complete("fwd_layer", time.perf_counter() - t_layer,
+                            args={"layer": l, "units": len(units)})
+
+    def _run_layer_stream(
+        self, l, params_l, fwd, activate, after_compute, name_out, cast,
+        units, gather_fn, prefetch_fn, transfer_fn, use_xfer, use_stacked,
+        keep_host,
+    ) -> None:
+        rt = self._rt
         for u, ga, _ in rt.run_stream(
             units, gather_fn, prefetch_fn,
             transfer_fn=transfer_fn if use_xfer else None,
+            cleanup_fn=self._cleanup_stream,
             wait_stage="compute_wait_fwd",
             xfer_wait_stage="compute_wait_xfer_fwd",
             xfer_up_stage="xfer_wait_up_fwd",
@@ -460,13 +537,3 @@ class ForwardRunner:
                     rt.retire_write(name_out, u.v0, out_dst)
                 else:
                     rt.write_rows(name_out, u.v0, out_np)
-        # barrier: the next layer reads name_out — all writes must be down
-        # (drain_writes retires pending D2H copies first)
-        rt.drain_writes()
-        # the output layer was just rewritten: cached blocks of it (loaded
-        # by a previous epoch's gathers) are stale — drop before any reader
-        self.cache.drop_layer(self.act_kind, l + 1, flush=False)
-        tracer = self.counters.tracer
-        if tracer.enabled:
-            tracer.complete("fwd_layer", time.perf_counter() - t_layer,
-                            args={"layer": l, "units": len(units)})

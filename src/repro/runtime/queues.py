@@ -86,6 +86,16 @@ class ReassemblyBuffer:
             self.counters.record_stall(stall_name or f"{self.name}.get", stall)
         return value
 
+    def drain_remaining(self) -> list:
+        """Teardown-only: pop every parked value (abort already set, the
+        workers joined). The unwind path releases any pooled buffers these
+        hold so a faulted epoch leaks nothing."""
+        with self._cond:
+            vals = list(self._slots.values())
+            self._slots.clear()
+            self._cond.notify_all()
+        return vals
+
 
 class StageQueue:
     def __init__(
@@ -128,3 +138,14 @@ class StageQueue:
         if stall > 0:
             self.counters.record_stall(stall_name or f"{self.name}.get", stall)
         return item
+
+    def drain_remaining(self) -> list:
+        """Teardown-only: pop everything still queued (sentinels excluded)."""
+        items = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                return items
+            if item is not DONE:
+                items.append(item)

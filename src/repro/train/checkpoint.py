@@ -1,12 +1,20 @@
 """Fault-tolerant checkpointing with elastic restore.
 
-Checkpoints are written atomically (tmp dir + rename) with a JSON manifest
-carrying step, RNG state, data-pipeline cursor, and the logical shapes of
-every leaf. Restore re-shards each leaf onto the *current* mesh — the saved
-artifact is mesh-independent, so a job can come back on a different device
-count (elastic scaling after node loss). On multi-host deployments each host
+Checkpoints are written atomically (tmp dir + per-file fsync + rename +
+directory fsync) with a JSON manifest carrying step, RNG state,
+data-pipeline cursor, and the logical shapes of every leaf. Restore
+re-shards each leaf onto the *current* mesh — the saved artifact is
+mesh-independent, so a job can come back on a different device count
+(elastic scaling after node loss). On multi-host deployments each host
 would write its addressable shards; the single-process container writes full
 logical arrays (noted per leaf in the manifest).
+
+Crash consistency contract: a checkpoint either exists completely (the
+rename published it, and every file inside was fsynced first) or not at
+all. ``latest_checkpoint`` only returns directories whose manifest parses
+and whose referenced payload files exist, so a torn save — including a
+``.tmp_*`` directory stranded by a crash mid-write — is never restored;
+``_gc`` sweeps those strays up on the next successful save.
 """
 from __future__ import annotations
 
@@ -19,6 +27,24 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file (or directory — required for the rename itself to be
+    durable on POSIX filesystems)."""
+    flags = os.O_RDONLY
+    if os.path.isdir(path) and hasattr(os, "O_DIRECTORY"):
+        flags |= os.O_DIRECTORY
+    try:
+        fd = os.open(path, flags)
+    except OSError:
+        return  # platform without directory fds: best effort
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -59,18 +85,50 @@ def save_checkpoint(
             manifest["leaves"][f"{tname}:{k}"] = {
                 "shape": list(arr.shape), "dtype": str(arr.dtype),
             }
-        np.savez(os.path.join(tmp, f"{tname}.npz"), **arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        fname = os.path.join(tmp, f"{tname}.npz")
+        np.savez(fname, **arrays)
+        _fsync_path(fname)
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)               # payload durable before the publish
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # atomic publish
+    _fsync_path(ckpt_dir)          # ... and the rename itself durable
     _gc(ckpt_dir, keep)
     return final
 
 
+def _is_complete(path: str) -> bool:
+    """A checkpoint directory is restorable iff its manifest parses and
+    every payload file the manifest references exists — a torn save
+    (crash between file writes, or a stray rename of garbage) fails this."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    if not isinstance(manifest, dict) or "step" not in manifest:
+        return False
+    tnames = {k.split(":", 1)[0] for k in manifest.get("leaves", {})}
+    return all(
+        os.path.exists(os.path.join(path, f"{t}.npz")) for t in tnames
+    )
+
+
 def _gc(ckpt_dir: str, keep: int) -> None:
+    for d in os.listdir(ckpt_dir):
+        path = os.path.join(ckpt_dir, d)
+        if d.startswith(".tmp_"):
+            # stranded by a crash mid-save (our own tmp dir was already
+            # renamed away) — never restorable, reclaim the space
+            shutil.rmtree(path, ignore_errors=True)
+        elif d.startswith("step_") and not _is_complete(path):
+            shutil.rmtree(path, ignore_errors=True)
     steps = sorted(
         d for d in os.listdir(ckpt_dir) if d.startswith("step_")
     )
@@ -79,12 +137,18 @@ def _gc(ckpt_dir: str, keep: int) -> None:
 
 
 def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    """Newest *complete* checkpoint (torn saves and ``.tmp_*`` strays are
+    skipped, never restored)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = sorted(
         d for d in os.listdir(ckpt_dir) if d.startswith("step_")
     )
-    return os.path.join(ckpt_dir, steps[-1]) if steps else None
+    for d in reversed(steps):
+        path = os.path.join(ckpt_dir, d)
+        if _is_complete(path):
+            return path
+    return None
 
 
 def restore_checkpoint(
