@@ -1,4 +1,4 @@
-"""Schema lint for CI JSON artifacts (BENCH_* and TRACE_* files).
+"""Schema lint for CI JSON artifacts (BENCH_*, TRACE_*, LINT_*, LOCKGRAPH_*).
 
 Validates that each artifact parses as JSON and carries the keys its
 consumers rely on:
@@ -13,6 +13,12 @@ consumers rely on:
   non-metadata span must be present (an empty timeline means the tracer was
   never wired through the run — exactly the regression this lint exists to
   catch).
+- ``LINT_*`` files: ``repro.analysis.lint --format json`` reports — rule
+  catalog + findings/suppressed lists with consistent counts (and since the
+  gate step already failed on findings, an uploaded report should be clean).
+- ``LOCKGRAPH_*`` files: the dynamic lock-order detector's acquisition
+  graph (``repro.analysis.runtime``) — edges/cycles/long-holds plus balance
+  counters; zero acquisitions means the instrumentation never engaged.
 
 Run:  python benchmarks/lint_artifacts.py FILE [FILE ...]
 Exits nonzero listing every failed check; prints one OK line per file.
@@ -139,6 +145,67 @@ def lint_fault_soak(path: str, doc) -> list:
     return errs
 
 
+def lint_lint_report(path: str, doc) -> list:
+    """repro.analysis.lint JSON report (LINT_* artifacts)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return [f"{path}: lint report is not a JSON object"]
+    if doc.get("version") != 1:
+        errs.append(f"{path}: unknown lint schema version {doc.get('version')!r}")
+    rules = doc.get("rules")
+    if not isinstance(rules, list) or len(rules) < 8:
+        errs.append(f"{path}: expected >=8 rules in the catalog")
+    elif not all(
+        isinstance(r, dict) and r.get("id") and r.get("summary") for r in rules
+    ):
+        errs.append(f"{path}: rule entries need id+summary")
+    counts = doc.get("counts", {})
+    for section in ("findings", "suppressed"):
+        items = doc.get(section)
+        if not isinstance(items, list):
+            errs.append(f"{path}: missing '{section}' list")
+            continue
+        if counts.get(section) != len(items):
+            errs.append(f"{path}: counts.{section} != len({section})")
+        for i, f in enumerate(items):
+            if not all(k in f for k in ("rule", "path", "line", "message")):
+                errs.append(f"{path}: {section}[{i}] missing finding keys")
+                break
+    if doc.get("findings"):
+        # the gate step fails the build on findings; an artifact carrying
+        # them anyway means the upload ran on a red tree
+        errs.append(f"{path}: report carries unsuppressed findings")
+    return errs
+
+
+def lint_lockgraph(path: str, doc) -> list:
+    """repro.analysis.runtime lock-acquisition graph (LOCKGRAPH_*)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return [f"{path}: lock graph is not a JSON object"]
+    if doc.get("kind") != "repro-lockgraph":
+        errs.append(f"{path}: kind != 'repro-lockgraph'")
+    if doc.get("version") != 1:
+        errs.append(f"{path}: unknown lockgraph version {doc.get('version')!r}")
+    for key in ("locks_created", "acquisitions", "releases"):
+        if not isinstance(doc.get(key), int):
+            errs.append(f"{path}: '{key}' missing/not an int")
+    if doc.get("acquisitions") == 0:
+        errs.append(f"{path}: zero acquisitions — instrumentation never engaged")
+    for key in ("edges", "cycles", "long_holds"):
+        if not isinstance(doc.get(key), list):
+            errs.append(f"{path}: '{key}' missing/not a list")
+    for i, e in enumerate(doc.get("edges") or []):
+        if not all(k in e for k in ("held_site", "acquired_site", "count")):
+            errs.append(f"{path}: edges[{i}] missing site/count keys")
+            break
+    if doc.get("cycles"):
+        # an uploaded graph with a potential deadlock should have failed
+        # the suite; flag it so the artifact can't pass quietly
+        errs.append(f"{path}: acquisition graph contains cycles")
+    return errs
+
+
 def lint(path: str) -> list:
     if not os.path.exists(path):
         return [f"{path}: file not found"]
@@ -147,12 +214,22 @@ def lint(path: str) -> list:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         return [f"{path}: not valid JSON ({e})"]
-    # content-sniff first (a trace is unambiguous), filename prefix second —
-    # so `--trace foo.json` runs still lint as traces
+    # content-sniff first (traces and the analysis payloads are
+    # unambiguous), filename prefix second — so arbitrarily named outputs
+    # still lint as the right kind
     if isinstance(doc, dict) and "traceEvents" in doc:
         return lint_trace(path, doc)
-    if os.path.basename(path).startswith("TRACE"):
+    if isinstance(doc, dict) and doc.get("kind") == "repro-lint":
+        return lint_lint_report(path, doc)
+    if isinstance(doc, dict) and doc.get("kind") == "repro-lockgraph":
+        return lint_lockgraph(path, doc)
+    base = os.path.basename(path)
+    if base.startswith("TRACE"):
         return lint_trace(path, doc)
+    if base.startswith("LINT_"):
+        return lint_lint_report(path, doc)
+    if base.startswith("LOCKGRAPH"):
+        return lint_lockgraph(path, doc)
     return lint_bench(path, doc)
 
 

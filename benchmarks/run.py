@@ -35,10 +35,10 @@ def main() -> None:
     for tag, mod in mods:
         if only and only not in tag:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod.main()
-            print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+            print(f"# {tag} done in {time.perf_counter()-t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1
             traceback.print_exc()

@@ -1,0 +1,15 @@
+"""Correctness tooling for the SSO runtime.
+
+Two layers:
+
+``repro.analysis.lint``
+    Static AST lint rules (R1..R8) encoding the runtime's concurrency and
+    resource-budget invariants.  CLI: ``python -m repro.analysis.lint src/``.
+
+``repro.analysis.runtime``
+    Opt-in dynamic lock-order / long-hold detector (instrumented ``Lock`` /
+    ``RLock`` wrappers + acquisition-graph cycle detection) used by the
+    instrumented test suites.
+
+See ``src/repro/analysis/README.md`` for the rule catalog.
+"""

@@ -1,0 +1,27 @@
+"""Static AST lint: concurrency & resource-budget invariant rules R1..R8.
+
+Programmatic API::
+
+    from repro.analysis.lint import lint_paths, lint_source
+    findings = lint_paths(["src/"])           # all findings (marked suppressed)
+    bad = [f for f in findings if not f.suppressed]
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.lint src/ --format json
+"""
+from repro.analysis.lint.core import (  # noqa: F401
+    Finding,
+    ModuleContext,
+    Rule,
+    all_rules,
+    get_rules,
+    lint_paths,
+    lint_source,
+    register,
+)
+from repro.analysis.lint.report import (  # noqa: F401
+    render_human,
+    render_json,
+    split_findings,
+)

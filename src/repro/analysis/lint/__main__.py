@@ -1,0 +1,75 @@
+"""CLI: ``python -m repro.analysis.lint PATH... [--format human|json]``.
+
+Exit status 0 when every finding is suppressed (or none exist), 1 when any
+unsuppressed finding remains, 2 on usage errors — so the CI fast gate can
+run it directly as a build-failing step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint.core import (
+    all_rules,
+    get_rules,
+    iter_python_files,
+    lint_paths,
+)
+from repro.analysis.lint.report import render_human, render_json, split_findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static concurrency/resource-invariant lint (rules R1..R8).",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--format", choices=("human", "json"), default="human")
+    ap.add_argument("--output", help="write the report here instead of stdout")
+    ap.add_argument(
+        "--select",
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  {r.name}: {r.summary}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        return 2
+
+    select = [s.strip() for s in args.select.split(",")] if args.select else None
+    try:
+        get_rules(select)
+    except KeyError as e:
+        print(f"repro-lint: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    files = list(iter_python_files(args.paths))
+    findings = lint_paths(args.paths, select=select)
+    if args.format == "json":
+        report = render_json(findings, len(files), args.paths)
+    else:
+        report = render_human(findings, len(files))
+    if args.output:
+        with open(args.output, "w") as fh:
+            fh.write(report + "\n")
+        # the gate still wants the verdict on stdout
+        active, suppressed = split_findings(findings)
+        print(
+            f"repro-lint: {len(active)} finding(s), {len(suppressed)} "
+            f"suppressed -> {args.output}"
+        )
+    else:
+        print(report)
+    active, _ = split_findings(findings)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

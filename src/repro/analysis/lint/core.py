@@ -1,0 +1,193 @@
+"""Lint framework core: findings, suppression, rule registry, file walker.
+
+Rules are small classes with a ``check(ctx)`` generator over
+:class:`Finding`.  Each file is parsed once into a :class:`ModuleContext`
+(AST + source lines + suppression map) shared by every rule.
+
+Suppression: a finding on line ``L`` is suppressed when the source carries a
+``# repro: allow[RULE]`` comment on line ``L`` or on line ``L-1``, e.g.::
+
+    t = time.time()          # repro: allow[R6] -- wall clock is the point
+    # repro: allow[R1,R8]
+    self.counters.cache_hits += 1
+
+Suppressed findings are still collected (reported under ``suppressed`` in
+the JSON output) so the suppression inventory stays auditable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+LINT_SCHEMA_VERSION = 1
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9_,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str                 # "R1".."R8"
+    path: str                 # file path as given to the linter
+    line: int                 # 1-based
+    col: int                  # 0-based
+    message: str
+    suppressed: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+
+class ModuleContext:
+    """Parsed view of one source file handed to every rule."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.allow: Dict[int, Set[str]] = _parse_allow_comments(source)
+        # names bound by "from threading import Thread" style imports
+        self.from_imports: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    self.from_imports[alias.asname or alias.name] = (
+                        f"{node.module}.{alias.name}"
+                    )
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        for ln in (line, line - 1):
+            allowed = self.allow.get(ln)
+            if allowed and (rule in allowed or "*" in allowed):
+                return True
+        return False
+
+
+def _parse_allow_comments(source: str) -> Dict[int, Set[str]]:
+    allow: Dict[int, Set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _ALLOW_RE.search(tok.string)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                allow.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenError:
+        pass
+    return allow
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``name``/``summary`` and implement
+    ``check(ctx)`` yielding findings (suppression is applied by the runner)."""
+
+    id: str = "R0"
+    name: str = "unnamed"
+    summary: str = ""
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node: ast.AST, message: str) -> Finding:
+        return Finding(
+            rule=self.id,
+            path=ctx.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule_cls):
+    """Class decorator adding a rule to the global registry."""
+    inst = rule_cls()
+    if inst.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    _REGISTRY[inst.id] = inst
+    return rule_cls
+
+
+def all_rules() -> List[Rule]:
+    # Importing rules registers them; keep the import here so `core` stays
+    # import-cycle free for the rules module itself.
+    from repro.analysis.lint import rules as _rules  # noqa: F401
+
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def get_rules(select: Optional[Sequence[str]] = None) -> List[Rule]:
+    rules = all_rules()
+    if select:
+        wanted = set(select)
+        unknown = wanted - {r.id for r in rules}
+        if unknown:
+            raise KeyError(f"unknown rule id(s): {sorted(unknown)}")
+        rules = [r for r in rules if r.id in wanted]
+    return rules
+
+
+# --------------------------------------------------------------- running
+def lint_source(
+    source: str, path: str = "<string>", select: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """Lint one source string; returns ALL findings (suppressed ones are
+    marked, not dropped)."""
+    try:
+        ctx = ModuleContext(path, source)
+    except SyntaxError as e:
+        return [
+            Finding(
+                rule="E0",
+                path=path,
+                line=e.lineno or 0,
+                col=e.offset or 0,
+                message=f"syntax error: {e.msg}",
+            )
+        ]
+    out: List[Finding] = []
+    for rule in get_rules(select):
+        for f in rule.check(ctx):
+            if ctx.is_suppressed(f.rule, f.line):
+                f = dataclasses.replace(f, suppressed=True)
+            out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[Path]:
+    seen: Set[Path] = set()
+    for p in paths:
+        pth = Path(p)
+        if pth.is_dir():
+            candidates: Iterable[Path] = sorted(pth.rglob("*.py"))
+        else:
+            candidates = [pth]
+        for c in candidates:
+            rc = c.resolve()
+            if rc not in seen:
+                seen.add(rc)
+                yield c
+
+
+def lint_paths(
+    paths: Iterable[str], select: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(lint_source(f.read_text(), path=str(f), select=select))
+    return findings

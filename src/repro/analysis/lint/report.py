@@ -1,0 +1,61 @@
+"""Finding reporters: human (one line per finding) and JSON (LINT_* schema).
+
+The JSON document is the schema the CI full job uploads as
+``LINT_src.json`` and ``benchmarks/lint_artifacts.py`` validates:
+
+    {"kind": "repro-lint", "version": 1,
+     "rules": [{"id", "name", "summary"}, ...],
+     "paths": [...],
+     "findings":   [{"rule","path","line","col","message","suppressed"}...],
+     "suppressed": [...same shape...],
+     "counts": {"findings": N, "suppressed": M, "files": K}}
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, List
+
+from repro.analysis.lint.core import LINT_SCHEMA_VERSION, Finding, all_rules
+
+
+def split_findings(findings: Iterable[Finding]):
+    active, suppressed = [], []
+    for f in findings:
+        (suppressed if f.suppressed else active).append(f)
+    return active, suppressed
+
+
+def render_human(findings: List[Finding], files_checked: int) -> str:
+    active, suppressed = split_findings(findings)
+    lines = [
+        f"{f.path}:{f.line}:{f.col}: {f.rule} {f.message}" for f in active
+    ]
+    lines.append(
+        f"repro-lint: {len(active)} finding(s), {len(suppressed)} "
+        f"suppressed, {files_checked} file(s), "
+        f"{len(all_rules())} rule(s) active"
+    )
+    return "\n".join(lines)
+
+
+def render_json(
+    findings: List[Finding], files_checked: int, paths: List[str]
+) -> str:
+    active, suppressed = split_findings(findings)
+    doc = {
+        "kind": "repro-lint",
+        "version": LINT_SCHEMA_VERSION,
+        "rules": [
+            {"id": r.id, "name": r.name, "summary": r.summary}
+            for r in all_rules()
+        ],
+        "paths": list(paths),
+        "findings": [f.to_dict() for f in active],
+        "suppressed": [f.to_dict() for f in suppressed],
+        "counts": {
+            "findings": len(active),
+            "suppressed": len(suppressed),
+            "files": files_checked,
+        },
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)

@@ -1,0 +1,17 @@
+"""Dynamic (runtime) analysis: opt-in lock-order and long-hold detection.
+
+Usage::
+
+    from repro.analysis.runtime import monitored_locks
+    with monitored_locks(long_hold_s=0.25) as mon:
+        ...build and run the engine...
+    report = mon.report()
+    assert report["cycles"] == []
+"""
+from repro.analysis.runtime.lockcheck import (  # noqa: F401
+    LOCKGRAPH_SCHEMA_VERSION,
+    LockMonitor,
+    MonitoredLock,
+    MonitoredRLock,
+    monitored_locks,
+)

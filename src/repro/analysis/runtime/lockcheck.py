@@ -1,0 +1,412 @@
+"""Dynamic lock-order and long-hold detector (opt-in instrumentation).
+
+:func:`monitored_locks` swaps ``threading.Lock``/``threading.RLock`` for
+monitored wrappers for the duration of a ``with`` block, so every lock the
+runtime creates inside it (HostCache, BufferPool, StorageIOQueue conditions,
+stage queues, Counters, ...) reports acquisitions into one
+:class:`LockMonitor`:
+
+* **acquisition graph** — per-thread held-lock stacks produce directed
+  edges *held-site → acquired-site* keyed by each lock's CREATION site
+  (lockdep-style class grouping: every HostCache instance made at
+  ``cache.py:87`` is one node). A cycle in that graph is a potential
+  deadlock even if this run got lucky with timing; the report carries the
+  first-seen stack of both ends of every edge in the cycle.
+* **long holds** — a lock held longer than ``long_hold_s`` is flagged with
+  its acquire/release sites. The runtime's critical sections are
+  microseconds of pointer shuffling, so a multi-millisecond hold means
+  blocking work (storage I/O, device sync) crept under a lock — the dynamic
+  mirror of lint rule R2.
+* **leaks** — :meth:`LockMonitor.held_now` exposes locks the calling thread
+  still owns, and the report counts acquisitions/releases so suites can
+  assert balance.
+
+``threading.Condition`` created inside the scope works unmodified: it
+allocates its ``RLock`` through the patched factory, and the wrapper
+implements the private ``_is_owned``/``_release_save``/``_acquire_restore``
+protocol ``Condition.wait`` relies on (a wait correctly ends the hold
+interval and re-starts it on wakeup, so waits are not misreported as long
+holds).
+
+Monitor bookkeeping is reentrancy-guarded: a weakref/GC callback that
+acquires a monitored lock while the monitor is mid-update is recorded as a
+no-op rather than deadlocking the bookkeeping.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import traceback
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Set, Tuple
+
+LOCKGRAPH_SCHEMA_VERSION = 1
+
+# the real factories, captured at import before anyone patches them
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+_ANALYSIS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _creation_site() -> str:
+    """'file.py:123' of the nearest stack frame outside this module and
+    outside threading.py — the lock's class-grouping key."""
+    stack = traceback.extract_stack()
+    for fr in reversed(stack[:-1]):
+        fn = fr.filename
+        if fn.startswith(_ANALYSIS_DIR) or fn.endswith("threading.py"):
+            continue
+        return f"{os.path.basename(fn)}:{fr.lineno}"
+    return "<unknown>"
+
+
+def _call_site() -> str:
+    stack = traceback.extract_stack()
+    for fr in reversed(stack[:-1]):
+        fn = fr.filename
+        if fn.startswith(_ANALYSIS_DIR) or fn.endswith("threading.py"):
+            continue
+        return f"{os.path.basename(fn)}:{fr.lineno}"
+    return "<unknown>"
+
+
+class _Held:
+    __slots__ = ("lock", "t0", "acquire_site", "depth")
+
+    def __init__(self, lock, t0: float, acquire_site: str):
+        self.lock = lock
+        self.t0 = t0
+        self.acquire_site = acquire_site
+        self.depth = 1
+
+
+class LockMonitor:
+    """Collects acquisition events from the monitored wrappers and renders
+    the LOCKGRAPH report (cycles, long holds, counts)."""
+
+    def __init__(self, long_hold_s: float = 0.25):
+        self.long_hold_s = float(long_hold_s)
+        self._mu = _REAL_RLOCK()       # guards the shared maps below
+        self._tls = threading.local()  # .held: List[_Held], .busy: bool
+        self.locks_created = 0
+        self.acquisitions = 0
+        self.releases = 0
+        self._sites: Dict[str, int] = {}           # creation site -> # locks
+        # (held_site, acquired_site) -> record
+        self._edges: Dict[Tuple[str, str], dict] = {}
+        self._long_holds: List[dict] = []
+
+    # -- wrapper callbacks ------------------------------------------------
+    def on_created(self, site: str) -> None:
+        with self._mu:
+            self.locks_created += 1
+            self._sites[site] = self._sites.get(site, 0) + 1
+
+    def _held(self) -> List[_Held]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    @contextmanager
+    def _guarded(self):
+        """Reentrancy guard: bookkeeping triggered from inside bookkeeping
+        (GC/weakref callbacks taking monitored locks) is skipped."""
+        if getattr(self._tls, "busy", False):
+            yield False
+            return
+        self._tls.busy = True
+        try:
+            yield True
+        finally:
+            self._tls.busy = False
+
+    def on_acquired(self, lock) -> None:
+        with self._guarded() as ok:
+            if not ok:
+                return
+            held = self._held()
+            for h in held:
+                if h.lock is lock:      # reentrant RLock re-entry: no edge
+                    h.depth += 1
+                    return
+            site = _call_site()
+            if held:
+                self._record_edge(held[-1], lock)
+            held.append(_Held(lock, time.monotonic(), site))
+            with self._mu:
+                self.acquisitions += 1
+
+    def on_released(self, lock) -> None:
+        with self._guarded() as ok:
+            if not ok:
+                return
+            held = self._held()
+            for i in range(len(held) - 1, -1, -1):
+                h = held[i]
+                if h.lock is not lock:
+                    continue
+                h.depth -= 1
+                if h.depth == 0:
+                    del held[i]
+                    self._end_hold(h)
+                return
+
+    def on_release_save(self, lock) -> None:
+        """Condition.wait: the RLock is fully released regardless of depth."""
+        with self._guarded() as ok:
+            if not ok:
+                return
+            held = self._held()
+            for i in range(len(held) - 1, -1, -1):
+                if held[i].lock is lock:
+                    h = held.pop(i)
+                    self._end_hold(h)
+                    return
+
+    def on_acquire_restore(self, lock) -> None:
+        """Condition.wait wakeup: the RLock is re-acquired at saved depth."""
+        with self._guarded() as ok:
+            if not ok:
+                return
+            held = self._held()
+            if held:
+                self._record_edge(held[-1], lock)
+            held.append(_Held(lock, time.monotonic(), _call_site()))
+            with self._mu:
+                self.acquisitions += 1
+
+    # -- bookkeeping -------------------------------------------------------
+    def _record_edge(self, held: _Held, acquiring) -> None:
+        if held.lock is acquiring:
+            return
+        key = (held.lock.site, acquiring.site)
+        same_instance = held.lock is acquiring
+        with self._mu:
+            rec = self._edges.get(key)
+            if rec is None:
+                # first sighting: capture both stacks (expensive, once/edge)
+                self._edges[key] = {
+                    "held_site": key[0],
+                    "acquired_site": key[1],
+                    "count": 1,
+                    "same_instance": same_instance,
+                    "held_acquired_at": held.acquire_site,
+                    "stack": [
+                        f"{os.path.basename(fr.filename)}:{fr.lineno} "
+                        f"{fr.name}"
+                        for fr in traceback.extract_stack()[:-3]
+                        if not fr.filename.startswith(_ANALYSIS_DIR)
+                    ][-12:],
+                }
+            else:
+                rec["count"] += 1
+
+    def _end_hold(self, h: _Held) -> None:
+        dt = time.monotonic() - h.t0
+        with self._mu:
+            self.releases += 1
+            if dt >= self.long_hold_s:
+                self._long_holds.append({
+                    "site": h.lock.site,
+                    "acquired_at": h.acquire_site,
+                    "released_at": _call_site(),
+                    "seconds": round(dt, 6),
+                })
+
+    # -- queries -----------------------------------------------------------
+    def held_now(self) -> List[str]:
+        """Creation sites of locks the CALLING thread currently owns."""
+        return [h.lock.site for h in self._held()]
+
+    def edges(self) -> List[dict]:
+        with self._mu:
+            return [dict(rec) for rec in self._edges.values()]
+
+    def find_cycles(self) -> List[dict]:
+        """Cycles in the site-level acquisition graph. Each is a potential
+        deadlock: two threads walking the cycle from different entry points
+        can block each other forever, whatever this run's timing did."""
+        with self._mu:
+            adj: Dict[str, Set[str]] = {}
+            for (a, b), rec in self._edges.items():
+                if rec["same_instance"]:
+                    continue  # reentrant self-edge, not an ordering
+                adj.setdefault(a, set()).add(b)
+        cycles: List[List[str]] = []
+        seen_sets: Set[frozenset] = set()
+
+        def dfs(start: str, node: str, path: List[str], visited: Set[str]):
+            for nxt in adj.get(node, ()):
+                if nxt == start:
+                    key = frozenset(path)
+                    if key not in seen_sets:
+                        seen_sets.add(key)
+                        cycles.append(path[:])
+                elif nxt not in visited and len(path) < 16:
+                    visited.add(nxt)
+                    path.append(nxt)
+                    dfs(start, nxt, path, visited)
+                    path.pop()
+
+        for site in list(adj):
+            dfs(site, site, [site], {site})
+        out = []
+        with self._mu:
+            for cyc in cycles:
+                edge_recs = []
+                for i, a in enumerate(cyc):
+                    b = cyc[(i + 1) % len(cyc)]
+                    rec = self._edges.get((a, b))
+                    if rec is not None:
+                        edge_recs.append(dict(rec))
+                out.append({"sites": cyc, "edges": edge_recs})
+        return out
+
+    @property
+    def long_holds(self) -> List[dict]:
+        with self._mu:
+            return [dict(h) for h in self._long_holds]
+
+    # -- reporting -----------------------------------------------------------
+    def report(self) -> dict:
+        return {
+            "kind": "repro-lockgraph",
+            "version": LOCKGRAPH_SCHEMA_VERSION,
+            "long_hold_threshold_s": self.long_hold_s,
+            "locks_created": self.locks_created,
+            "acquisitions": self.acquisitions,
+            "releases": self.releases,
+            "sites": dict(self._sites),
+            "edges": self.edges(),
+            "cycles": self.find_cycles(),
+            "long_holds": self.long_holds,
+        }
+
+    def export_json(self, path: str, merge: bool = True) -> dict:
+        """Write the report; with ``merge=True`` an existing file at ``path``
+        (an earlier test's export) is folded in: counts sum, edge counts
+        sum, cycles/long-holds concatenate. Returns the written document."""
+        doc = self.report()
+        if merge and os.path.exists(path):
+            try:
+                with open(path) as fh:
+                    prev = json.load(fh)
+            except (OSError, ValueError):
+                prev = None
+            if isinstance(prev, dict) and prev.get("kind") == doc["kind"]:
+                for k in ("locks_created", "acquisitions", "releases"):
+                    doc[k] += int(prev.get(k, 0))
+                for site, n in (prev.get("sites") or {}).items():
+                    doc["sites"][site] = doc["sites"].get(site, 0) + n
+                known = {
+                    (e["held_site"], e["acquired_site"]): e
+                    for e in doc["edges"]
+                }
+                for e in prev.get("edges", []):
+                    key = (e.get("held_site"), e.get("acquired_site"))
+                    if key in known:
+                        known[key]["count"] += e.get("count", 0)
+                    else:
+                        doc["edges"].append(e)
+                doc["cycles"].extend(prev.get("cycles", []))
+                doc["long_holds"].extend(prev.get("long_holds", []))
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+        return doc
+
+
+class MonitoredLock:
+    """Drop-in ``threading.Lock`` reporting into a :class:`LockMonitor`."""
+
+    _kind = "Lock"
+
+    def __init__(self, monitor: LockMonitor, site: str):
+        self._raw = _REAL_LOCK()
+        self._mon = monitor
+        self.site = site
+        monitor.on_created(site)
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._raw.acquire(blocking, timeout)
+        if ok:
+            self._mon.on_acquired(self)
+        return ok
+
+    def release(self) -> None:
+        self._mon.on_released(self)
+        self._raw.release()
+
+    def locked(self) -> bool:
+        return self._raw.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.release()
+        return False
+
+    def __repr__(self):
+        return f"<Monitored{self._kind} site={self.site}>"
+
+
+class MonitoredRLock(MonitoredLock):
+    """Drop-in ``threading.RLock`` — including the private protocol
+    ``threading.Condition`` uses, so ``Condition()`` created under
+    :func:`monitored_locks` is transparently instrumented too."""
+
+    _kind = "RLock"
+
+    def __init__(self, monitor: LockMonitor, site: str):
+        self._raw = _REAL_RLOCK()
+        self._mon = monitor
+        self.site = site
+        monitor.on_created(site)
+
+    # Condition protocol --------------------------------------------------
+    def _is_owned(self) -> bool:
+        return self._raw._is_owned()
+
+    def _release_save(self):
+        state = self._raw._release_save()
+        self._mon.on_release_save(self)
+        return state
+
+    def _acquire_restore(self, state) -> None:
+        self._raw._acquire_restore(state)
+        self._mon.on_acquire_restore(self)
+
+
+@contextmanager
+def monitored_locks(
+    monitor: Optional[LockMonitor] = None, long_hold_s: float = 0.25
+):
+    """Patch ``threading.Lock``/``threading.RLock`` so every lock CREATED
+    inside the block is monitored (existing locks are untouched). Yields the
+    :class:`LockMonitor`; the factories are restored on exit, while locks
+    created inside keep reporting for their lifetime — an engine built in
+    the block stays instrumented through its close().
+    """
+    mon = monitor or LockMonitor(long_hold_s=long_hold_s)
+    orig_lock, orig_rlock = threading.Lock, threading.RLock
+
+    def _lock_factory():
+        return MonitoredLock(mon, _creation_site())
+
+    def _rlock_factory():
+        return MonitoredRLock(mon, _creation_site())
+
+    threading.Lock = _lock_factory
+    threading.RLock = _rlock_factory
+    try:
+        yield mon
+    finally:
+        threading.Lock = orig_lock
+        threading.RLock = orig_rlock

@@ -102,8 +102,18 @@ class HostCache:
         """Route dirty-eviction flushes through an async ``StorageIOQueue``
         (pass ``None`` to restore synchronous flushes). The caller owns the
         queue's lifetime and must drain it before freeing/reading spill
-        targets outside the queue's FIFO."""
+        targets outside the queue's FIFO.
+
+        Wiring also registers this cache's lock with the queue's blocking-
+        submit guard (``repro.core.storage.set_io_guard``): when the guard
+        is on, a blocking ``submit_*`` from a thread that owns this lock
+        raises — the runtime mirror of lint rule R2."""
+        prev = self._spill_queue
+        if prev is not None and prev is not queue:
+            prev.unregister_guard_lock(self._lock)
         self._spill_queue = queue
+        if queue is not None:
+            queue.register_guard_lock(self._lock)
 
     @property
     def spill_queue(self):

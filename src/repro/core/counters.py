@@ -98,6 +98,15 @@ class Counters:
         with self._lock:
             setattr(self, field, getattr(self, field) + amount)
 
+    def bump_many(self, **fields: int) -> None:
+        """Thread-safe increment of several scalar fields in one lock trip
+        (``c.bump_many(storage_read_bytes=nb, storage_read_ops=1)``): the
+        storage tiers account whole operations this way, so two tiers
+        sharing one instance can't interleave half-updated op/byte pairs."""
+        with self._lock:
+            for field, amount in fields.items():
+                setattr(self, field, getattr(self, field) + amount)
+
     def record_busy(self, stage: str, seconds: float, args=None) -> None:
         """Work executed on a pipeline worker thread (overlappable).
 

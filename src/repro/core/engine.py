@@ -283,7 +283,8 @@ class SSOEngine:
         pin = self.pipeline.pin_prefetched
         key = ("snap", layer, u.p)
         resident = self.cache.prefetch(
-            key, loader=partial(self._load_snap, layer, u.p, u.n_req), pin=pin
+            key, loader=partial(self._load_snap, layer, u.p, u.n_req), pin=pin,
+            size_hint=u.n_req * self.dims[layer] * self.dtype.itemsize,
         )
         if pin and resident:
             self._prefetch_pins[(layer, u.p)] = [key]

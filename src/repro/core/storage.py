@@ -32,6 +32,27 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.counters import Counters
+from repro.core.threads import join_bounded, spawn
+
+# --------------------------------------------------------------------------
+# Lock-holding guard (lint rule R2's runtime mirror): when enabled, blocking
+# StorageIOQueue submissions raise if the calling thread currently owns a
+# registered consumer lock (e.g. the HostCache RLock that wired itself via
+# set_spill_queue). Off by default — it costs an _is_owned() probe per
+# submit — and switched on for the whole test suite by tests/conftest.py.
+_IO_GUARD = os.environ.get("REPRO_IO_GUARD", "0").lower() not in (
+    "0", "", "false", "no",
+)
+
+
+def set_io_guard(enabled: bool) -> None:
+    """Enable/disable the blocking-submit-under-lock guard process-wide."""
+    global _IO_GUARD
+    _IO_GUARD = bool(enabled)
+
+
+def io_guard_enabled() -> bool:
+    return _IO_GUARD
 
 PAGE_BYTES = 16 * 1024  # NVMe page granularity used throughout the paper
 
@@ -301,11 +322,13 @@ class StorageTier:
         self._reliable("write",
                        lambda: self._write_rows_once(name, row0, arr))
         nb = arr.nbytes
-        c = self.counters
-        with self._lock:
-            c.storage_write_bytes += nb
-            c.storage_write_paged_bytes += self._paged(nb)
-            c.storage_write_ops += 1
+        # one locked trip on the Counters' OWN lock: two tiers sharing one
+        # instance (activation + grad files) must not interleave updates
+        self.counters.bump_many(
+            storage_write_bytes=nb,
+            storage_write_paged_bytes=self._paged(nb),
+            storage_write_ops=1,
+        )
 
     def read_rows(self, name: str, row0: int, row1: int) -> np.ndarray:
         verify = None
@@ -315,11 +338,11 @@ class StorageTier:
             "read", lambda: self._read_rows_once(name, row0, row1), verify
         )
         nb = out.nbytes
-        c = self.counters
-        with self._lock:
-            c.storage_read_bytes += nb
-            c.storage_read_paged_bytes += self._paged(nb)
-            c.storage_read_ops += 1
+        self.counters.bump_many(
+            storage_read_bytes=nb,
+            storage_read_paged_bytes=self._paged(nb),
+            storage_read_ops=1,
+        )
         return out
 
     def read_rows_batched(self, requests) -> list:
@@ -349,11 +372,11 @@ class StorageTier:
         for out in outs:
             nb += out.nbytes
             paged += self._paged(out.nbytes)
-        c = self.counters
-        with self._lock:
-            c.storage_read_bytes += nb
-            c.storage_read_paged_bytes += paged
-            c.storage_read_ops += 1
+        self.counters.bump_many(
+            storage_read_bytes=nb,
+            storage_read_paged_bytes=paged,
+            storage_read_ops=1,
+        )
         return outs
 
     def read_rows_scattered(self, name: str, rows: np.ndarray) -> np.ndarray:
@@ -375,13 +398,13 @@ class StorageTier:
             return out
         # contiguous runs
         runs = 1 + int(np.sum(np.diff(np.sort(rows)) > 1))
-        c = self.counters
-        with self._lock:
-            c.storage_read_bytes += out.nbytes
-            c.storage_read_paged_bytes += max(
+        self.counters.bump_many(
+            storage_read_bytes=out.nbytes,
+            storage_read_paged_bytes=max(
                 runs * self.page, self._paged(out.nbytes)
-            )
-            c.storage_read_ops += runs
+            ),
+            storage_read_ops=runs,
+        )
         return out
 
 
@@ -451,10 +474,40 @@ class StorageIOQueue:
         self._write_lat = m.histogram("storage.write_seconds")
         self._m_deadline = m.counter("io.deadline_misses")
         self._m_slow_flips = m.counter("io.slow_lane_flips")
-        self._thread = threading.Thread(
-            target=self._run, name="sso-io", daemon=True
-        )
-        self._thread.start()
+        # consumer locks registered for the blocking-submit guard (each a
+        # re-entrant lock exposing _is_owned, e.g. the HostCache RLock)
+        self._guard_locks: list = []
+        self._thread = spawn("sso-io", self._run)
+
+    # -- lock-holding guard ---------------------------------------------
+    def register_guard_lock(self, lock) -> None:
+        """Register a consumer's re-entrant lock: while the guard is on
+        (``set_io_guard``/``REPRO_IO_GUARD``), a BLOCKING submission from a
+        thread that owns ``lock`` raises instead of risking a stall or a
+        deadlock against the cache's own eviction path. The non-blocking
+        spill (``submit_write(wait=False)``) stays exempt by design."""
+        if lock not in self._guard_locks:
+            self._guard_locks.append(lock)
+
+    def unregister_guard_lock(self, lock) -> None:
+        try:
+            self._guard_locks.remove(lock)
+        except ValueError:
+            pass
+
+    def _check_guard(self, op: str) -> None:
+        if not _IO_GUARD:
+            return
+        for lk in self._guard_locks:
+            owned = getattr(lk, "_is_owned", None)
+            if owned is not None and owned():
+                raise RuntimeError(
+                    f"StorageIOQueue.{op} called from a thread holding a "
+                    f"registered cache lock — blocking I/O under the cache "
+                    f"lock serializes every cache user behind disk latency "
+                    f"(lint rule R2); stage the I/O outside the critical "
+                    f"section or use submit_write(wait=False)"
+                )
 
     # -- submission ---------------------------------------------------------
     @property
@@ -474,6 +527,8 @@ class StorageIOQueue:
         byte backpressure — for callers that must not block while holding
         a lock (the cache's dirty-eviction spill); the bytes still count
         toward the in-flight total that throttles regular writers."""
+        if wait:
+            self._check_guard("submit_write")
         nb = int(arr.nbytes)
         t0 = time.perf_counter()
         with self._cond:
@@ -508,6 +563,7 @@ class StorageIOQueue:
         write, so a read of a region queued after its write always sees
         the written data — the engine relies on this for grad-file reads
         behind degraded-mode spill writes."""
+        self._check_guard("submit_read")
         with self._cond:
             if self._closed:
                 raise RuntimeError("StorageIOQueue is closed")
@@ -526,6 +582,7 @@ class StorageIOQueue:
         """Queue one vectored read of many ``(name, row0, row1)`` ranges;
         the future resolves to the list of arrays (one per range). Same
         FIFO ordering guarantee as :meth:`submit_read`."""
+        self._check_guard("submit_read_batch")
         with self._cond:
             if self._closed:
                 raise RuntimeError("StorageIOQueue is closed")
@@ -665,10 +722,5 @@ class StorageIOQueue:
             with self._cond:
                 self._q.append(StorageIOQueue._CLOSE)
                 self._cond.notify_all()
-            self._thread.join(timeout=5)
-            if self._thread.is_alive():
-                _log.warning(
-                    "storage I/O thread %s leaked (wedged op?)",
-                    self._thread.name,
-                )
-                self.counters.bump("threads_leaked")
+            join_bounded(self._thread, 5, self.counters,
+                         what="storage I/O thread")

@@ -104,11 +104,30 @@ class EmbeddingServer:
             else:
                 resident[int(b)] = arr
         if missing:
-            reqs = [(self.name,) + self._block_range(b) for b in missing]
-            outs = self._io.submit_read_batch(reqs).result()
+            # reserve-before-materialize (lint rule R4): claim cache budget
+            # for each block BEFORE the vectored read lands the bytes, so
+            # peak host memory can't transiently overshoot the budget. A
+            # block whose claim fails is served uncached (bypass).
+            reqs, reserved = [], {}
+            for b in missing:
+                r0, r1 = self._block_range(b)
+                reqs.append((self.name, r0, r1))
+                nb = (r1 - r0) * self.dim * self.table_dtype.itemsize
+                reserved[b] = nb if self.cache.reserve(nb) else 0
+            try:
+                outs = self._io.submit_read_batch(reqs).result()
+            except BaseException:
+                for nb in reserved.values():
+                    if nb:
+                        self.cache.unreserve(nb)
+                raise
             for b, arr in zip(missing, outs):
                 resident[b] = arr
-                self.cache.put(("emb", 0, b), arr)
+                if reserved[b]:
+                    self.cache.put(("emb", 0, b), arr,
+                                   reserved_bytes=reserved[b])
+                else:
+                    self.counters.bump("cache_bypass")
         return resident, set(missing)
 
     # ---------------------------------------------------------------- lookup

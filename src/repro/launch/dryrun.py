@@ -134,7 +134,7 @@ def run_cell(
     from repro.configs import get_arch
     from repro.launch.mesh import make_production_mesh
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     arch = get_arch(arch_name)
@@ -197,7 +197,7 @@ def run_cell(
         t_coll = coll_total / ICI_BW_PER_CHIP
         rec.update(
             status="ok",
-            seconds=round(time.time() - t0, 1),
+            seconds=round(time.perf_counter() - t0, 1),
             memory=dict(
                 argument_bytes=mem.argument_size_in_bytes,
                 output_bytes=mem.output_size_in_bytes,
@@ -230,7 +230,7 @@ def run_cell(
         rec.update(
             status="fail", error=f"{type(e).__name__}: {e}",
             traceback=traceback.format_exc()[-4000:],
-            seconds=round(time.time() - t0, 1),
+            seconds=round(time.perf_counter() - t0, 1),
         )
     return rec
 

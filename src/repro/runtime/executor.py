@@ -49,6 +49,7 @@ import numpy as np
 from repro.core.cache import HostCache
 from repro.core.counters import Counters
 from repro.core.storage import StorageIOQueue, StorageTier
+from repro.core.threads import join_bounded, spawn
 from repro.runtime.config import PipelineConfig
 from repro.runtime.queues import (
     DONE, PipelineAbort, ReassemblyBuffer, StageQueue,
@@ -400,10 +401,7 @@ class PipelineExecutor:
             if self._retire_exc is not None:
                 raise self._retire_exc
             if self._retire_thread is None:
-                self._retire_thread = threading.Thread(
-                    target=self._retire_worker, name="sso-d2h", daemon=True
-                )
-                self._retire_thread.start()
+                self._retire_thread = spawn("sso-d2h", self._retire_worker)
             while self._retire_inflight >= cap:
                 self._retire_cond.wait(0.02)
                 if self._retire_exc is not None:
@@ -606,15 +604,9 @@ class PipelineExecutor:
             finally:
                 _unit_cleanup(inhand)
 
-        threads = [
-            threading.Thread(
-                target=_prefetch_worker, name="sso-prefetch", daemon=True
-            )
-        ]
+        threads = [spawn("sso-prefetch", _prefetch_worker, start=False)]
         threads += [
-            threading.Thread(
-                target=_gather_worker, name=f"sso-gather-{i}", daemon=True
-            )
+            spawn(f"sso-gather-{i}", _gather_worker, start=False)
             for i in range(nworkers)
         ]
 
@@ -649,11 +641,7 @@ class PipelineExecutor:
                 finally:
                     _unit_cleanup(inhand)
 
-            threads.append(
-                threading.Thread(
-                    target=_transfer_worker, name="sso-h2d", daemon=True
-                )
-            )
+            threads.append(spawn("sso-h2d", _transfer_worker, start=False))
 
         for t in threads:
             t.start()
@@ -683,16 +671,8 @@ class PipelineExecutor:
                     tracer.end(f"unit:{gather_stage}", f"{sid}.{seq}")
         finally:
             abort.set()
-            for t in threads:
-                t.join(timeout=self.cfg.thread_join_timeout_s)
-            for t in threads:
-                if t.is_alive():
-                    _log.warning(
-                        "pipeline stage thread %s leaked after %.1fs join "
-                        "timeout (wedged I/O op?)",
-                        t.name, self.cfg.thread_join_timeout_s,
-                    )
-                    c.bump("threads_leaked")
+            join_bounded(threads, self.cfg.thread_join_timeout_s, c,
+                         what="pipeline stage thread")
             if cleanup_fn is not None:
                 stranded = list(reasm.drain_remaining())
                 if q_dev is not None:
@@ -722,12 +702,7 @@ class PipelineExecutor:
             if t is not None:
                 with self._retire_cond:
                     self._retire_cond.notify_all()
-                t.join(timeout=self.cfg.thread_join_timeout_s)
-                if t.is_alive():
-                    _log.warning(
-                        "D2H retire thread %s leaked after %.1fs join "
-                        "timeout", t.name, self.cfg.thread_join_timeout_s,
-                    )
-                    self.counters.bump("threads_leaked")
+                join_bounded(t, self.cfg.thread_join_timeout_s,
+                             self.counters, what="D2H retire thread")
             if self._writer is not None:
                 self._writer.close()

@@ -72,7 +72,7 @@ def save_checkpoint(
         trees["opt_state"] = opt_state
     manifest = {
         "step": int(step),
-        "time": time.time(),
+        "time": time.time(),  # repro: allow[R6] -- manifest wants wall clock
         "extra": extra or {},
         "leaves": {},
     }

@@ -6,6 +6,20 @@ import pytest
 import jax
 
 
+@pytest.fixture(scope="session", autouse=True)
+def io_guard_on():
+    """Run the WHOLE suite with the StorageIOQueue blocking-submit guard on
+    (off by default in production): any test path that issues a blocking
+    submit while holding a registered cache lock fails loudly instead of
+    silently serializing behind disk latency — the runtime mirror of lint
+    rule R2."""
+    from repro.core.storage import set_io_guard
+
+    set_io_guard(True)
+    yield
+    set_io_guard(False)
+
+
 @pytest.fixture(scope="session")
 def small_graph():
     from repro.graph import kronecker_graph

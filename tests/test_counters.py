@@ -204,3 +204,69 @@ def test_reset_restores_timeline_and_obs_state():
     assert c._mem_stride == 1 and c._mem_seen == 0
     assert c.cache_peak_bytes == 0
     assert c.metrics.counter("x").value == 0.0   # registry reset rides along
+
+
+def test_bump_many_atomic_and_multi_field():
+    """``bump_many`` updates several fields in ONE lock trip: concurrent
+    hammering from many threads must lose no update on any field."""
+    c = Counters()
+    n_threads, n_iters = 8, 3000
+    start = threading.Barrier(n_threads)
+
+    def _hammer():
+        start.wait()
+        for _ in range(n_iters):
+            c.bump_many(storage_read_bytes=64, storage_read_paged_bytes=4096,
+                        storage_read_ops=1)
+
+    threads = [threading.Thread(target=_hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = n_threads * n_iters
+    assert c.storage_read_ops == total
+    assert c.storage_read_bytes == 64 * total
+    assert c.storage_read_paged_bytes == 4096 * total
+
+
+def test_storage_tier_accounting_exact_under_two_tier_contention():
+    """Regression (lint rule R1): StorageTier.write_rows/read_rows mutated
+    the shared Counters fields under the TIER's lock, not the Counters'
+    own — two tiers sharing one instance (activation + grad files) raced
+    and lost updates. The totals must be exact."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import StorageTier
+
+    c = Counters()
+    tiers = [StorageTier(tempfile.mkdtemp(), counters=c) for _ in range(2)]
+    for t_ in tiers:
+        t_.alloc("f", (64, 8), np.float32)
+    arr = np.ones((8, 8), np.float32)
+    n_threads, n_iters = 4, 200
+    start = threading.Barrier(n_threads)
+
+    def _hammer(i):
+        tier = tiers[i % 2]
+        start.wait()
+        for _ in range(n_iters):
+            tier.write_rows("f", 0, arr)
+            tier.read_rows("f", 0, 8)
+
+    threads = [
+        threading.Thread(target=_hammer, args=(i,)) for i in range(n_threads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = n_threads * n_iters
+    assert c.storage_write_ops == total
+    assert c.storage_read_ops == total
+    assert c.storage_write_bytes == arr.nbytes * total
+    assert c.storage_read_bytes == arr.nbytes * total
+    for t_ in tiers:
+        t_.close()

@@ -265,3 +265,47 @@ def test_embedding_server_validates_ids():
         srv.lookup([0])
     inf.close()
     st_.close()
+
+
+def test_embedding_server_reserves_before_materializing():
+    """Regression (lint rule R4): ``_fetch_blocks`` inserted freshly read
+    blocks with a bare ``cache.put`` AFTER the vectored read materialized
+    them — the budget check ran too late to stop a transient overshoot.
+    Every insert must now consume a prior reservation, and a failed claim
+    must degrade to bypass (served uncached) instead of inserting."""
+    plan, Xr = _setup(n_nodes=400, n_parts=4)
+    dims = [16, 16, 8]
+    spec = get_gnn("gcn")
+    params = _params(spec, dims)
+    _, _, st_, inf = _infer(plan, Xr, dims, params, 0)
+
+    srv = EmbeddingServer(st_, "emb", plan.ro, 1 << 20, block_rows=32)
+    puts = []
+    orig_put = srv.cache.put
+
+    def spy_put(key, arr, **kw):
+        puts.append(kw)
+        return orig_put(key, arr, **kw)
+
+    srv.cache.put = spy_put
+    srv.lookup(np.arange(0, plan.n_nodes, 3))   # miss-heavy first batch
+    assert puts, "expected cache inserts from the misses"
+    assert all(kw.get("reserved_bytes", 0) > 0 for kw in puts)
+    # all claims were consumed or returned: reservation balance is zero
+    assert srv.cache._reserved == 0
+    assert srv.cache.used_bytes <= srv.cache.budget
+    srv.close()
+
+    # reserve failure (budget below one block) serves uncached: no inserts
+    srv2 = EmbeddingServer(st_, "emb", plan.ro, 64, block_rows=128)
+    puts2 = []
+    orig_put2 = srv2.cache.put
+    srv2.cache.put = lambda *a, **k: (puts2.append(k), orig_put2(*a, **k))[1]
+    out = srv2.lookup(np.arange(0, 128, 5))
+    assert out.shape == (26, dims[-1])
+    assert puts2 == []                              # nothing admitted
+    assert srv2.counters.cache_bypass > 0           # misses counted as bypass
+    assert srv2.cache._reserved == 0
+    srv2.close()
+    inf.close()
+    st_.close()

@@ -1,0 +1,327 @@
+"""Dynamic-analysis suite: the lock-order/leak detector itself, the engine
+running clean under full lock instrumentation, and the StorageIOQueue
+blocking-submit guard (lint rule R2's runtime mirror).
+
+The acceptance property from the analyzer PR: the engine-equivalence and
+fault-unwind scenarios run under ``monitored_locks`` with an EMPTY
+lock-cycle report, zero outstanding cache pins, and zero outstanding pool
+buffers. Set ``REPRO_LOCKGRAPH_OUT=<path>`` to export the merged
+acquisition-graph artifact (the CI full job uploads it).
+"""
+import gc
+import json
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.runtime import LockMonitor, monitored_locks
+from repro.core import Counters, HostCache, SSOEngine, StorageTier, build_plan
+from repro.core.faults import FaultPolicy, FaultyTier
+from repro.core.storage import (
+    RetryPolicy, StorageError, StorageIOQueue, io_guard_enabled, set_io_guard,
+)
+from repro.graph import (
+    gcn_norm_coeffs, kronecker_graph, switching_aware_partition,
+)
+from repro.graph.csr import add_self_loops
+from repro.graph.synthetic import random_features, random_labels
+from repro.models.gnn.layers import get_gnn
+from repro.runtime import PipelineConfig
+
+_FAST_RETRY = RetryPolicy(max_retries=8, backoff_s=1e-4, backoff_max_s=1e-3,
+                          op_deadline_s=5.0)
+
+
+def _setup(n_nodes=900, n_parts=5, d_in=16, seed=0):
+    g = add_self_loops(kronecker_graph(n_nodes, 7, seed=seed))
+    res = switching_aware_partition(g, n_parts, max_iters=8, seed=seed)
+    plan = build_plan(g, res.parts, n_parts, edge_weight=gcn_norm_coeffs(g))
+    X = random_features(g.n_nodes, d_in, seed)
+    Y = random_labels(g.n_nodes, 8, seed)
+    return plan, X[plan.ro.perm], Y[plan.ro.perm]
+
+
+def _build_engine(plan, tier, c, dims, depth, gather_workers=1,
+                  budget_kb=8192, **pkw):
+    spec = get_gnn("gcn")
+    params = spec.init(jax.random.PRNGKey(0), dims[0], dims[1], dims[-1],
+                       len(dims) - 1)
+    cache = HostCache(budget_kb << 10, tier, c)
+    eng = SSOEngine(
+        spec, plan, dims, tier, cache, c, mode="regather",
+        pipeline=PipelineConfig(depth=depth, gather_workers=gather_workers,
+                                transfer_stage=True, **pkw),
+    )
+    return eng, cache, params
+
+
+def _assert_trees_identical(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture
+def lock_monitor():
+    """Instrument every lock created in the test; on teardown assert the
+    acquisition graph is cycle-free and export the merged LOCKGRAPH
+    artifact when REPRO_LOCKGRAPH_OUT is set."""
+    mon = LockMonitor(long_hold_s=0.25)
+    with monitored_locks(mon):
+        yield mon
+    report = mon.report()
+    out = os.environ.get("REPRO_LOCKGRAPH_OUT")
+    if out:
+        mon.export_json(out, merge=True)
+    assert report["cycles"] == [], report["cycles"]
+    assert report["acquisitions"] > 0, "instrumentation never engaged"
+
+
+# ------------------------------------------------- detector unit behaviour
+class TestLockMonitor:
+    def test_balanced_acquire_release_and_sites(self):
+        with monitored_locks() as mon:
+            lk = threading.Lock()
+            with lk:
+                pass
+            lk.acquire()
+            lk.release()
+        rep = mon.report()
+        assert rep["locks_created"] == 1
+        assert rep["acquisitions"] == rep["releases"] == 2
+        assert rep["cycles"] == [] and rep["edges"] == []
+        # patched factories are restored on exit
+        assert "Monitored" not in type(threading.Lock()).__name__
+
+    def test_reentrant_rlock_records_no_self_edge(self):
+        with monitored_locks() as mon:
+            r = threading.RLock()
+            with r:
+                with r:
+                    with r:
+                        pass
+        rep = mon.report()
+        assert rep["edges"] == [] and rep["cycles"] == []
+        assert rep["acquisitions"] == rep["releases"] == 1  # outermost only
+
+    def test_nested_distinct_locks_record_edge_not_cycle(self):
+        with monitored_locks() as mon:
+            a = threading.Lock()
+            b = threading.Lock()
+            with a:
+                with b:
+                    pass
+        rep = mon.report()
+        assert len(rep["edges"]) == 1
+        e = rep["edges"][0]
+        assert e["count"] == 1 and e["stack"]
+        assert rep["cycles"] == []
+
+    def test_ab_ba_ordering_reports_cycle_with_stacks(self):
+        """Two threads taking the same two locks in opposite orders is a
+        potential deadlock even when this run's timing never wedged."""
+        with monitored_locks() as mon:
+            a = threading.Lock()
+            b = threading.Lock()
+
+            def t1():
+                with a:
+                    time.sleep(0.01)
+                    with b:
+                        pass
+
+            def t2():
+                time.sleep(0.03)
+                with b:
+                    with a:
+                        pass
+
+            th1 = threading.Thread(target=t1)  # repro: allow[R8]
+            th2 = threading.Thread(target=t2)  # repro: allow[R8]
+            th1.start(); th2.start(); th1.join(); th2.join()
+        cycles = mon.find_cycles()
+        assert cycles, "AB-BA ordering must be reported"
+        sites = set(cycles[0]["sites"])
+        assert len(sites) == 2
+        assert all(e["stack"] for e in cycles[0]["edges"])
+
+    def test_long_hold_flagged_with_sites(self):
+        with monitored_locks(long_hold_s=0.05) as mon:
+            lk = threading.Lock()
+            with lk:
+                time.sleep(0.08)
+        holds = mon.long_holds
+        assert len(holds) == 1
+        assert holds[0]["seconds"] >= 0.05
+        assert holds[0]["site"] and holds[0]["acquired_at"]
+
+    def test_condition_wait_is_not_a_long_hold(self):
+        """Condition.wait releases the underlying RLock — the wait interval
+        must not be charged as a hold (the _release_save/_acquire_restore
+        protocol path)."""
+        with monitored_locks(long_hold_s=0.05) as mon:
+            cond = threading.Condition()
+            done = []
+
+            def waiter():
+                with cond:
+                    while not done:
+                        cond.wait(0.02)
+
+            t = threading.Thread(target=waiter)  # repro: allow[R8]
+            t.start()
+            time.sleep(0.12)   # waiter sits in wait() well past threshold
+            with cond:
+                done.append(1)
+                cond.notify_all()
+            t.join()
+        rep = mon.report()
+        assert rep["long_holds"] == []
+        assert rep["cycles"] == []
+        assert rep["acquisitions"] == rep["releases"]
+
+    def test_export_json_merges_runs(self, tmp_path):
+        out = str(tmp_path / "LOCKGRAPH_x.json")
+        for _ in range(2):
+            with monitored_locks() as mon:
+                a = threading.Lock()
+                b = threading.Lock()
+                with a:
+                    with b:
+                        pass
+            mon.export_json(out, merge=True)
+        doc = json.loads(open(out).read())
+        assert doc["kind"] == "repro-lockgraph" and doc["version"] == 1
+        assert doc["locks_created"] == 4
+        assert doc["acquisitions"] == doc["releases"] == 4
+        assert sum(e["count"] for e in doc["edges"]) == 2
+        assert doc["cycles"] == []
+
+
+# ------------------------------------- instrumented engine acceptance runs
+def test_engine_equivalence_under_lock_monitor(lock_monitor):
+    """The pipelined engine (sharded gathers + transfer stage + async D2H)
+    is bit-identical to the serial schedule while every lock it creates is
+    instrumented; teardown asserts the acquisition graph is cycle-free, and
+    the run leaves zero pins and zero outstanding pool buffers."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+
+    c0 = Counters()
+    st0 = StorageTier(tempfile.mkdtemp(), counters=c0)
+    eng0, _, params = _build_engine(plan, st0, c0, dims, depth=0)
+    eng0.initialize(Xr)
+    l0, g0 = eng0.run_epoch(params, Yr)
+    eng0.close()
+    st0.close()
+
+    c1 = Counters()
+    st1 = StorageTier(tempfile.mkdtemp(), counters=c1)
+    eng1, cache, params1 = _build_engine(plan, st1, c1, dims, depth=2,
+                                         gather_workers=2, async_d2h=True)
+    eng1.initialize(Xr)
+    l1, g1 = eng1.run_epoch(params1, Yr)
+    assert l0 == l1
+    _assert_trees_identical(g0, g1)
+    assert cache.total_pins == 0
+    eng1.close()
+    st1.close()
+    gc.collect()
+    assert eng1.fwd_runner._rt.pool.outstanding == 0
+    # the run exercised real lock nesting (cache->counters at minimum)
+    assert lock_monitor.edges(), "expected acquisition edges from the engine"
+    assert lock_monitor.find_cycles() == []
+
+
+def test_fault_unwind_under_lock_monitor(lock_monitor):
+    """The unrecoverable-fault unwind path (typed raise out of a pipelined
+    epoch) holds the same invariants under instrumentation: no cycle, no
+    long hold wedge, zero pins, zero outstanding buffers."""
+    plan, Xr, Yr = _setup()
+    dims = [16, 24, 8]
+    policy = FaultPolicy(seed=0).schedule("read", 2, "enospc")
+    c = Counters()
+    st_ = FaultyTier(tempfile.mkdtemp(), policy=policy, counters=c,
+                     retry=_FAST_RETRY)
+    eng, cache, params = _build_engine(plan, st_, c, dims, depth=2,
+                                       gather_workers=2)
+    eng.initialize(Xr)
+    with pytest.raises(StorageError):
+        eng.run_epoch(params, Yr)
+    assert cache.total_pins == 0
+    gc.collect()
+    assert eng.fwd_runner._rt.pool.outstanding == 0
+    eng.close()
+    st_.close()
+    assert lock_monitor.find_cycles() == []
+
+
+# --------------------------------------- StorageIOQueue lock-holding guard
+class TestSubmitGuard:
+    """Satellite: blocking submit_* from a thread holding a registered
+    cache lock raises (on in tests via conftest, off by default)."""
+
+    def _cache_and_queue(self, tmpdir, budget=1 << 20):
+        c = Counters()
+        st = StorageTier(tmpdir, counters=c)
+        st.alloc("t", (64, 8), np.float32)
+        cache = HostCache(budget, st, c)
+        q = StorageIOQueue(st, counters=c)
+        cache.set_spill_queue(q)   # registers cache._lock with the guard
+        return c, st, cache, q
+
+    def test_guard_enabled_in_test_suite(self):
+        assert io_guard_enabled()   # conftest turns it on suite-wide
+
+    def test_blocking_submit_under_cache_lock_raises(self):
+        c, st, cache, q = self._cache_and_queue(tempfile.mkdtemp())
+        arr = np.ones((4, 8), np.float32)
+        with cache._lock:
+            with pytest.raises(RuntimeError, match="holding a registered"):
+                q.submit_read("t", 0, 4)
+            with pytest.raises(RuntimeError, match="holding a registered"):
+                q.submit_read_batch([("t", 0, 4)])
+            with pytest.raises(RuntimeError, match="holding a registered"):
+                q.submit_write("t", 0, arr)   # wait=True: blocking
+        q.close()
+        st.close()
+
+    def test_nonblocking_spill_submit_is_exempt(self):
+        c, st, cache, q = self._cache_and_queue(tempfile.mkdtemp())
+        arr = np.ones((4, 8), np.float32)
+        with cache._lock:
+            fut = q.submit_write("t", 0, arr, wait=False)
+        fut.result()
+        q.drain()
+        q.close()
+        st.close()
+
+    def test_submits_off_the_lock_pass_and_guard_can_disable(self):
+        c, st, cache, q = self._cache_and_queue(tempfile.mkdtemp())
+        arr = np.ones((4, 8), np.float32)
+        q.submit_write("t", 0, arr).result()
+        np.testing.assert_array_equal(
+            q.submit_read("t", 0, 4).result(), arr
+        )
+        set_io_guard(False)
+        try:
+            with cache._lock:
+                q.submit_read("t", 0, 4).result()   # guard off: permitted
+        finally:
+            set_io_guard(True)
+        q.close()
+        st.close()
+
+    def test_unwire_unregisters_guard_lock(self):
+        c, st, cache, q = self._cache_and_queue(tempfile.mkdtemp())
+        cache.set_spill_queue(None)
+        with cache._lock:
+            q.submit_read("t", 0, 4).result()   # no longer registered
+        q.close()
+        st.close()
