@@ -1,6 +1,13 @@
-"""Shared benchmark setup (graph + engine construction, timing)."""
+"""Shared benchmark setup (graph + engine construction, timing) plus the
+observability plumbing every BENCH producer goes through: provenance
+stamping for ``BENCH_*.json`` artifacts, the ``--ledger`` append path into
+``RUNS/ledger.jsonl`` (repro.obs.ledger), and the attribution helper that
+sets the storage peak to the EMULATED NVMe bandwidth when a bench emulates
+one."""
 from __future__ import annotations
 
+import dataclasses
+import json
 import tempfile
 import time
 from typing import Dict, Optional
@@ -149,3 +156,78 @@ def run_engine_epoch(
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# --------------------------------------------------------------------------
+# observability plumbing (shared by every BENCH producer)
+
+#: schema of the stamped BENCH_*.json artifact envelope (NOT the ledger's
+#: record schema — that is repro.obs.ledger.LEDGER_SCHEMA_VERSION)
+BENCH_SCHEMA_VERSION = 1
+
+
+def add_obs_args(ap):
+    """Attach the shared observability flags to a bench's argparser."""
+    ap.add_argument(
+        "--ledger", nargs="?", const="RUNS/ledger.jsonl", default=None,
+        metavar="PATH",
+        help="append a schema-versioned run record to this JSONL ledger "
+             "(default RUNS/ledger.jsonl) for the perf-regression sentinel",
+    )
+    return ap
+
+
+def stamp_payload(payload: Dict, run_kind: str) -> Dict:
+    """Stamp a BENCH_*.json payload with provenance: schema version,
+    run kind, config fingerprint, git rev, wall-clock write time. The
+    fingerprint hashes the payload's ``config`` section with the SAME
+    function the ledger uses, so an artifact and its ledger record can be
+    joined by fingerprint."""
+    from repro.obs.ledger import config_fingerprint, git_revision
+
+    out = dict(payload)
+    out["schema_version"] = BENCH_SCHEMA_VERSION
+    out["run_kind"] = str(run_kind)
+    out["fingerprint"] = config_fingerprint(out.get("config", {}))
+    rev = git_revision()
+    if rev:
+        out["git_rev"] = rev
+    out["written_at"] = time.time()
+    return out
+
+
+def write_bench_json(path: str, payload: Dict, run_kind: str) -> Dict:
+    """Stamp + write a bench artifact; prints the producers' uniform
+    ``json,<path>,written`` CSV line."""
+    payload = stamp_payload(payload, run_kind)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    print(f"json,{path},written")
+    return payload
+
+
+def ledger_append(path: str, run_kind: str, config: Dict, headline: Dict,
+                  *, counters=None, watch=None, attribution=None,
+                  extra=None) -> Dict:
+    """Build + append one run record to the JSONL ledger. The backend
+    string is resolved here (the obs layer is stdlib-only and must not
+    import jax)."""
+    from repro.obs.ledger import RunLedger, make_record
+
+    rec = make_record(
+        run_kind, config, headline, counters=counters, watch=watch,
+        attribution=attribution, backend=jax.default_backend(), extra=extra,
+    )
+    RunLedger(path).append(rec)
+    print(f"ledger,{path},appended run_kind={run_kind} "
+          f"fingerprint={rec['fingerprint']}")
+    return rec
+
+
+def bench_bandwidths(storage_gbps: float = 0.0):
+    """Tier peaks for attribution: when the bench emulates an NVMe lane,
+    utilization must be judged against the EMULATED bandwidth (the peak the
+    run could actually have reached), not the paper's 12 GB/s device."""
+    if storage_gbps and storage_gbps > 0:
+        return dataclasses.replace(PAPER_WORKSTATION, ssd=storage_gbps * 1e9)
+    return PAPER_WORKSTATION

@@ -18,7 +18,6 @@ JSON: --json [PATH] writes the soak report (default BENCH_fault_soak.json)
       diverges from the clean run or any serve lookup came back wrong.
 """
 import argparse
-import json
 import sys
 import threading
 import time
@@ -150,6 +149,16 @@ def run_soak(args):
         target=_serve_loop, args=(srv, batches, emb, stop, serve_out),
         name="soak-serve", daemon=True,
     )
+    # live observability over the soak's counters: periodic one-line status
+    # (a wedged lane shows up in seconds, not at soak end) and an optional
+    # scrapeable /metrics endpoint
+    sampler = server = None
+    if args.status_interval > 0:
+        from repro.obs.live import LiveSampler
+        sampler = LiveSampler(c1, log_every_s=args.status_interval).start()
+    if args.telemetry_port is not None:
+        from repro.obs.live import TelemetryServer
+        server = TelemetryServer(c1, port=args.telemetry_port).start()
     t0 = time.perf_counter()
     t.start()
     try:
@@ -161,6 +170,10 @@ def run_soak(args):
         stop.set()
         t.join(timeout=30)
         srv.close()
+        if sampler is not None:
+            sampler.stop()
+        if server is not None:
+            server.stop()
     wall = time.perf_counter() - t0
     st1.close()
 
@@ -187,8 +200,9 @@ def run_soak(args):
         serve_lookups=serve_out["lookups"],
         serve_rows=serve_out["rows"],
         serve_errors=serve_out["errors"],
+        sampler_ticks=sampler.ticks if sampler is not None else 0,
         wall_s=wall,
-    )
+    ), c1
 
 
 def main() -> int:
@@ -217,13 +231,29 @@ def main() -> int:
     ap.add_argument("--json", nargs="?", const="BENCH_fault_soak.json",
                     default=None, metavar="PATH",
                     help="write the soak report as JSON")
+    ap.add_argument("--status-interval", type=float, default=0.0,
+                    metavar="SEC",
+                    help="log a one-line live status every SEC seconds "
+                         "during the soak (repro.obs.live sampler; 0 = off)")
+    ap.add_argument("--telemetry-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve live Prometheus metrics on this port for "
+                         "the duration of the soak (0 = ephemeral)")
+    from benchmarks.common import add_obs_args
+    add_obs_args(ap)
     args = ap.parse_args()
     if args.smoke:
         args.nodes, args.parts, args.hidden = 3000, 6, 32
         args.layers, args.epochs = 2, 2
         args.serve_batches = 20
+    if args.status_interval > 0:
+        import logging
+        logging.basicConfig(
+            level=logging.INFO,
+            format="%(asctime)s %(name)s %(message)s",
+        )
 
-    soak = run_soak(args)
+    soak, c1 = run_soak(args)
 
     print(f"clean   losses: {soak['losses_clean']}")
     print(f"faulted losses: {soak['losses_faulty']}")
@@ -237,24 +267,33 @@ def main() -> int:
         f"errors={len(soak['serve_errors'])} wall={soak['wall_s']:.2f}s"
     )
 
+    config = dict(
+        nodes=args.nodes, parts=args.parts, layers=args.layers,
+        hidden=args.hidden, epochs=args.epochs, depth=args.depth,
+        gather_workers=args.gather_workers, seed=args.seed,
+        read_error_rate=args.read_error_rate,
+        write_error_rate=args.write_error_rate,
+        read_corrupt_rate=args.read_corrupt_rate,
+        torn_write_rate=args.torn_write_rate,
+        latency_spike_rate=args.latency_spike_rate,
+        smoke=args.smoke,
+    )
     if args.json:
-        payload = dict(
-            config=dict(
-                nodes=args.nodes, parts=args.parts, layers=args.layers,
-                hidden=args.hidden, epochs=args.epochs, depth=args.depth,
-                gather_workers=args.gather_workers, seed=args.seed,
-                read_error_rate=args.read_error_rate,
-                write_error_rate=args.write_error_rate,
-                read_corrupt_rate=args.read_corrupt_rate,
-                torn_write_rate=args.torn_write_rate,
-                latency_spike_rate=args.latency_spike_rate,
-                smoke=args.smoke,
-            ),
-            soak=soak,
+        from benchmarks.common import write_bench_json
+
+        write_bench_json(args.json, dict(config=config, soak=soak),
+                         "fault_soak")
+    if args.ledger:
+        from benchmarks.common import ledger_append
+
+        ledger_append(
+            args.ledger, "fault_soak", config,
+            dict(wall_s=soak["wall_s"],
+                 faults_injected=soak["faults_injected"],
+                 io_retries=soak["io_retries"],
+                 serve_lookups=soak["serve_lookups"]),
+            counters=c1, watch={"wall_s": "lower"},
         )
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        print(f"wrote {args.json}")
 
     if soak["serve_errors"]:
         print("FAIL: serve lane returned wrong/failed lookups:",

@@ -21,7 +21,6 @@ JSON: --json [PATH] writes per-shape timings (default
       BENCH_kernel_hotpath.json) for CI perf-trajectory artifacts.
 """
 import argparse
-import json
 import sys
 import time
 
@@ -125,6 +124,8 @@ def main() -> int:
     ap.add_argument("--json", nargs="?", const="BENCH_kernel_hotpath.json",
                     default=None, metavar="PATH",
                     help="also write per-shape timings as JSON (CI artifact)")
+    from benchmarks.common import add_obs_args
+    add_obs_args(ap)
     args = ap.parse_args()
 
     # engine-shaped: (n_rows of staged stack, edges, dst rows, feature dim).
@@ -156,13 +157,16 @@ def main() -> int:
         print(f"dispatch,0,{tag} interpret={interpret} "
               f"pallas_wins={sum(wins.values())}/{len(wins)}")
 
+    config = dict(
+        backend=jax.default_backend(), interpret=interpret,
+        iters=args.iters, smoke=args.smoke,
+        shapes=[list(s) for s in shapes],
+    )
     if args.json:
+        from benchmarks.common import write_bench_json
+
         payload = dict(
-            config=dict(
-                backend=jax.default_backend(), interpret=interpret,
-                iters=args.iters, smoke=args.smoke,
-                shapes=[list(s) for s in shapes],
-            ),
+            config=config,
             kernels=rows,
             note=(
                 "interpret-mode Pallas on CPU is an emulation; the "
@@ -172,9 +176,21 @@ def main() -> int:
                 "compiled Pallas timings on an accelerator backend"
             ),
         )
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        print(f"json,{args.json},written")
+        write_bench_json(args.json, payload, "kernel_hotpath")
+    if args.ledger:
+        from benchmarks.common import ledger_append
+
+        # per-kernel, per-shape series: both dispatch paths' call time must
+        # not creep up (lower is better on every key)
+        headline, watch = {}, {}
+        for i, e in enumerate(rows):
+            for k in ("gather_rows", "gather_aggregate", "scatter_add"):
+                headline[f"{k}_ref_us_{i}"] = e[k]["ref_us"]
+                headline[f"{k}_pallas_us_{i}"] = e[k]["pallas_us"]
+                watch[f"{k}_ref_us_{i}"] = "lower"
+                watch[f"{k}_pallas_us_{i}"] = "lower"
+        ledger_append(args.ledger, "kernel_hotpath", config, headline,
+                      watch=watch)
 
     # sanity: on CPU the dispatch layer must NOT be told pallas wins; on an
     # accelerator we only report (CI runs CPU-only)

@@ -1,11 +1,20 @@
-"""Schema lint for CI JSON artifacts (BENCH_*, TRACE_*, LINT_*, LOCKGRAPH_*).
+"""Schema lint for CI JSON artifacts (BENCH_*, TRACE_*, LINT_*, LOCKGRAPH_*,
+REGRESS_*, and ``*.jsonl`` run ledgers).
 
 Validates that each artifact parses as JSON and carries the keys its
 consumers rely on:
 
 - ``BENCH_*`` files: the perf-trajectory payloads written by the benches'
   ``--json`` flags — must be an object with a ``config`` section plus the
-  bench's own result section(s).
+  bench's own result section(s), stamped with schema version + config
+  fingerprint (benchmarks/common.py).
+- ``*.jsonl`` ledgers: one ``repro-run`` record per line
+  (repro.obs.ledger) — every line must parse and carry the provenance
+  fields, and each record's fingerprint must actually hash its config.
+- ``REGRESS_*`` files: the perf-regression sentinel's report
+  (benchmarks/regress.py) — checks/counts must be consistent, and an
+  uploaded report carrying regressions is flagged (the gate step should
+  have failed the job).
 - ``TRACE_*`` files: Chrome/Perfetto ``trace_event`` timelines from
   ``--trace`` — must be the object form (``{"traceEvents": [...]}``), every
   event must carry ``name``/``ph``/``ts``/``pid``/``tid`` with a known
@@ -23,6 +32,7 @@ consumers rely on:
 Run:  python benchmarks/lint_artifacts.py FILE [FILE ...]
 Exits nonzero listing every failed check; prints one OK line per file.
 """
+import hashlib
 import json
 import os
 import sys
@@ -206,9 +216,110 @@ def lint_lockgraph(path: str, doc) -> list:
     return errs
 
 
+def _lint_ledger_record(rec) -> list:
+    """One ``repro-run`` ledger record (kept standalone: this tool runs
+    without PYTHONPATH=src, so the schema is restated here — the authority
+    is repro.obs.ledger, whose own validate_record refuses these at write
+    time)."""
+    errs = []
+    if not isinstance(rec, dict):
+        return ["record is not a JSON object"]
+    if rec.get("kind") != "repro-run":
+        errs.append(f"kind != 'repro-run' (got {rec.get('kind')!r})")
+    if rec.get("schema_version") != 1:
+        errs.append(f"unknown schema_version {rec.get('schema_version')!r}")
+    if not isinstance(rec.get("run_kind"), str) or not rec.get("run_kind"):
+        errs.append("run_kind missing/empty")
+    if not isinstance(rec.get("config"), dict):
+        errs.append("config missing/not an object")
+    if not isinstance(rec.get("headline"), dict):
+        errs.append("headline missing/not an object")
+    if not isinstance(rec.get("written_at"), (int, float)):
+        errs.append("written_at missing/not numeric")
+    fp = rec.get("fingerprint")
+    if not isinstance(fp, str) or len(fp) < 8:
+        errs.append("fingerprint missing/not a hash string")
+    elif isinstance(rec.get("config"), dict):
+        blob = json.dumps(rec["config"], sort_keys=True,
+                          separators=(",", ":"), default=str)
+        if fp != hashlib.sha256(blob.encode()).hexdigest()[:16]:
+            errs.append("fingerprint does not hash the config it carries")
+    watch = rec.get("watch", {})
+    if not isinstance(watch, dict):
+        errs.append("watch not an object")
+    elif any(d not in ("lower", "higher") for d in watch.values()):
+        errs.append("watch directions must be 'lower'/'higher'")
+    return errs
+
+
+def lint_ledger(path: str) -> list:
+    """A ``.jsonl`` run ledger: every line a valid repro-run record."""
+    errs = []
+    n = 0
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError as e:
+                errs.append(f"{path}:{i}: unparseable ledger line ({e})")
+                continue
+            n += 1
+            errs += [f"{path}:{i}: {m}" for m in _lint_ledger_record(rec)]
+            if len(errs) > 20:
+                errs.append(f"{path}: ... (truncated)")
+                break
+    if n == 0:
+        errs.append(f"{path}: empty ledger — producer never appended")
+    return errs
+
+
+def lint_regress(path: str, doc) -> list:
+    """benchmarks/regress.py sentinel report (REGRESS_* artifacts)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return [f"{path}: regress report is not a JSON object"]
+    if doc.get("kind") != "repro-regress":
+        errs.append(f"{path}: kind != 'repro-regress'")
+    if doc.get("version") != 1:
+        errs.append(
+            f"{path}: unknown regress schema version {doc.get('version')!r}"
+        )
+    if not isinstance(doc.get("ledger"), str):
+        errs.append(f"{path}: 'ledger' path missing")
+    checks = doc.get("checks")
+    if not isinstance(checks, list):
+        return errs + [f"{path}: missing 'checks' list"]
+    verdicts = {"ok": 0, "regression": 0, "skip": 0}
+    for i, c in enumerate(checks):
+        if not all(k in c for k in ("run_kind", "metric", "verdict")):
+            errs.append(f"{path}: checks[{i}] missing run_kind/metric/verdict")
+            continue
+        v = c["verdict"]
+        if v not in verdicts:
+            errs.append(f"{path}: checks[{i}] unknown verdict {v!r}")
+        else:
+            verdicts[v] += 1
+    counts = doc.get("counts", {})
+    expected = dict(checks=len(checks), regressions=verdicts["regression"],
+                    ok=verdicts["ok"], skipped=verdicts["skip"])
+    if counts != expected:
+        errs.append(f"{path}: counts {counts} != recomputed {expected}")
+    if verdicts["regression"]:
+        # the sentinel gate exits nonzero on regressions; an uploaded
+        # report carrying them means the upload ran on a red job
+        errs.append(f"{path}: report carries regressions")
+    return errs
+
+
 def lint(path: str) -> list:
     if not os.path.exists(path):
         return [f"{path}: file not found"]
+    if path.endswith(".jsonl"):
+        # JSON Lines ledgers can't go through the whole-file json.load
+        return lint_ledger(path)
     try:
         with open(path) as f:
             doc = json.load(f)
@@ -223,6 +334,10 @@ def lint(path: str) -> list:
         return lint_lint_report(path, doc)
     if isinstance(doc, dict) and doc.get("kind") == "repro-lockgraph":
         return lint_lockgraph(path, doc)
+    if isinstance(doc, dict) and doc.get("kind") == "repro-regress":
+        return lint_regress(path, doc)
+    if isinstance(doc, dict) and doc.get("kind") == "repro-run":
+        return [f"{path}: {m}" for m in _lint_ledger_record(doc)]
     base = os.path.basename(path)
     if base.startswith("TRACE"):
         return lint_trace(path, doc)
@@ -230,6 +345,8 @@ def lint(path: str) -> list:
         return lint_lint_report(path, doc)
     if base.startswith("LOCKGRAPH"):
         return lint_lockgraph(path, doc)
+    if base.startswith("REGRESS"):
+        return lint_regress(path, doc)
     return lint_bench(path, doc)
 
 

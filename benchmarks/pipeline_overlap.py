@@ -17,9 +17,7 @@ JSON: --json [PATH] writes the full comparison (default
       BENCH_pipeline_overlap.json) for CI perf-trajectory artifacts.
 """
 import argparse
-import json
 import sys
-import time
 
 
 def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers,
@@ -38,7 +36,8 @@ def run_pair(wl, depth, epochs, cache_mb, mode, latency_us, gbps, workers,
         )
         # min-of-epochs: robust to noisy-neighbour CPU spikes on shared boxes
         out[d] = dict(
-            wall=min(walls), mean_wall=sum(walls) / len(walls), loss=loss,
+            wall=min(walls), mean_wall=sum(walls) / len(walls),
+            total_wall=sum(walls), loss=loss,
             counters=c, overlap=c.overlap_summary(sum(walls)),
         )
     return out
@@ -84,6 +83,8 @@ def main() -> int:
                     help="write a Chrome/Perfetto trace_event timeline of "
                          "the pipelined run's timed epochs (CI artifact; "
                          "open in ui.perfetto.dev)")
+    from benchmarks.common import add_obs_args
+    add_obs_args(ap)
     args = ap.parse_args()
 
     if args.smoke:
@@ -149,19 +150,48 @@ def main() -> int:
     print(f"prefetch_working_set,{sum(ws) / len(ws):.1f},"
           f"mean source partitions staged ahead at depth {args.depth}")
 
+    # achieved-vs-peak utilization of the pipelined run: bytes + busy time
+    # from the counters joined against the tier peaks (the emulated NVMe
+    # bandwidth when emulating — utilization vs what the run COULD reach)
+    from benchmarks.common import bench_bandwidths, gnn_epoch_flops
+    from repro.obs.attribution import attribution_report, format_attribution
+
+    flops = args.epochs * gnn_epoch_flops(
+        wl["g"].n_nodes, wl["g"].n_edges, wl["dims"])
+    attr = attribution_report(
+        c.snapshot(), bench_bandwidths(args.storage_gbps),
+        pipe["total_wall"], flops=flops, metrics=c.metrics.snapshot(),
+    )
+    print(format_attribution(attr))
+
+    config = dict(
+        nodes=args.nodes, parts=args.parts, layers=args.layers,
+        hidden=args.hidden, depth=args.depth,
+        gather_workers=args.gather_workers, epochs=args.epochs,
+        cache_mb=args.cache_mb, mode=args.mode,
+        storage_latency_us=args.storage_latency_us,
+        storage_gbps=args.storage_gbps,
+        transfer_stage=not args.no_transfer,
+        device_slots=args.device_slots,
+        kernels=args.kernels,
+    )
+    headline = dict(
+        wall_s=pipe["wall"], serial_wall_s=ser["wall"], speedup=speedup,
+        overlapped_frac=ov["overlapped_frac"],
+        overlapped_frac_fwd=ov["overlapped_frac_fwd"],
+        overlapped_frac_bwd=ov["overlapped_frac_bwd"],
+        overlapped_frac_xfer=ov["overlapped_frac_xfer"],
+        read_ops=pipe_ops,
+    )
+    # the sentinel's marching orders: wall must not creep up, overlap must
+    # not creep down (speedup is derived, read_ops is informational)
+    watch = {"wall_s": "lower", "overlapped_frac": "higher"}
+
     if args.json:
+        from benchmarks.common import write_bench_json
+
         payload = dict(
-            config=dict(
-                nodes=args.nodes, parts=args.parts, layers=args.layers,
-                hidden=args.hidden, depth=args.depth,
-                gather_workers=args.gather_workers, epochs=args.epochs,
-                cache_mb=args.cache_mb, mode=args.mode,
-                storage_latency_us=args.storage_latency_us,
-                storage_gbps=args.storage_gbps,
-                transfer_stage=not args.no_transfer,
-                device_slots=args.device_slots,
-                kernels=args.kernels,
-            ),
+            config=config,
             serial=dict(
                 wall_s=ser["wall"], mean_wall_s=ser["mean_wall"],
                 storage_read_ops=ser_ops,
@@ -175,12 +205,16 @@ def main() -> int:
                 stage_busy_s=dict(sorted(c.stage_busy_seconds.items())),
                 stage_stall_s=dict(sorted(c.stage_stall_seconds.items())),
             ),
+            attribution=attr,
             speedup=speedup,
             read_ops_ratio=(pipe_ops / ser_ops) if ser_ops else None,
         )
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        print(f"json,{args.json},written")
+        write_bench_json(args.json, payload, "pipeline_overlap")
+    if args.ledger:
+        from benchmarks.common import ledger_append
+
+        ledger_append(args.ledger, "pipeline_overlap", config, headline,
+                      counters=c, watch=watch, attribution=attr)
 
     ok = True
     if ov["overlapped_frac"] <= 0.0:

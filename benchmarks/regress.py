@@ -1,0 +1,90 @@
+"""CI perf-regression sentinel over the run ledger.
+
+Reads ``RUNS/ledger.jsonl`` (appended to by every bench's ``--ledger``
+flag), and for each run kind judges the LATEST record's watched headline
+metrics against the trailing window of prior records with the SAME config
+fingerprint, using the median ± MAD-scaled band from
+:mod:`repro.obs.regress`. Exits nonzero iff any check regresses; too few
+baseline samples is a SKIP, not a failure — the sentinel accumulates
+history before it starts judging.
+
+Deliberately light: stdlib + ``repro.obs`` only (no jax import), so it runs
+in seconds at the end of a CI job.
+
+Run:  python benchmarks/regress.py [--ledger PATH] [--json [PATH]]
+CSV:  verdict,run_kind.metric,detail
+"""
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):
+    # direct `python benchmarks/regress.py` invocation: make `repro`
+    # importable without requiring PYTHONPATH=src
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.ledger import RunLedger                      # noqa: E402
+from repro.obs.regress import (                             # noqa: E402
+    DEFAULT_MAD_SCALE, DEFAULT_MIN_SAMPLES, DEFAULT_REL_FLOOR,
+    DEFAULT_WINDOW, REGRESSION, check_ledger, report_payload,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ledger", default="RUNS/ledger.jsonl", metavar="PATH",
+                    help="JSONL run ledger to judge (default %(default)s)")
+    ap.add_argument("--run-kind", action="append", default=None,
+                    metavar="KIND",
+                    help="restrict to these run kinds (repeatable; "
+                         "default: every kind present in the ledger)")
+    ap.add_argument("--window", type=int, default=DEFAULT_WINDOW,
+                    help="trailing baseline records per series "
+                         "(default %(default)s)")
+    ap.add_argument("--min-samples", type=int, default=DEFAULT_MIN_SAMPLES,
+                    help="baseline samples required before judging "
+                         "(fewer = skip; default %(default)s)")
+    ap.add_argument("--mad-scale", type=float, default=DEFAULT_MAD_SCALE,
+                    help="band half-width in robust sigmas "
+                         "(default %(default)s)")
+    ap.add_argument("--rel-floor", type=float, default=DEFAULT_REL_FLOOR,
+                    help="band floor as a fraction of the baseline median "
+                         "(default %(default)s)")
+    ap.add_argument("--json", nargs="?", const="REGRESS_report.json",
+                    default=None, metavar="PATH",
+                    help="also write the full report as JSON (CI artifact)")
+    args = ap.parse_args(argv)
+
+    ledger = RunLedger(args.ledger)
+    if not os.path.exists(args.ledger):
+        # a missing ledger is a cold start (first CI run, pruned cache) —
+        # nothing to judge is not a regression
+        print(f"skip,-,ledger {args.ledger} does not exist (cold start)")
+        return 0
+    params = dict(window=args.window, min_samples=args.min_samples,
+                  mad_scale=args.mad_scale, rel_floor=args.rel_floor)
+    results = check_ledger(ledger, run_kinds=args.run_kind, **params)
+
+    print("verdict,metric,detail")
+    for r in results:
+        print(f"{r.verdict},{r.run_kind}.{r.metric},"
+              f"n_baseline={r.n_baseline} {r.detail}")
+
+    if args.json:
+        payload = report_payload(results, args.ledger, params)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"json,{args.json},written")
+
+    regressions = [r for r in results if r.verdict == REGRESSION]
+    if regressions:
+        for r in regressions:
+            print(f"FAIL {r.run_kind}.{r.metric}: {r.detail}",
+                  file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,12 +11,20 @@
   fig13_bandwidth    Fig 13b/§8.9: SSD bandwidth sensitivity + write volume
   roofline           §Roofline from the dry-run artifacts
 """
+import argparse
 import sys
 import time
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on the table/figure tags")
+    from benchmarks.common import add_obs_args
+    add_obs_args(ap)
+    args = ap.parse_args()
+
     from benchmarks import (
         fig9_memory, fig12_models, fig13_bandwidth, io_volume, roofline,
         table1_engines, table2_scaling, table3_cache, table4_partitioner,
@@ -29,22 +37,36 @@ def main() -> None:
         ("fig12", fig12_models), ("fig13", fig13_bandwidth),
         ("roofline", roofline),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args.only
     print("name,us_per_call,derived")
     failures = 0
+    timings = {}
     for tag, mod in mods:
         if only and only not in tag:
             continue
         t0 = time.perf_counter()
         try:
             mod.main()
-            print(f"# {tag} done in {time.perf_counter()-t0:.1f}s", flush=True)
+            timings[f"{tag}_s"] = time.perf_counter() - t0
+            print(f"# {tag} done in {timings[f'{tag}_s']:.1f}s", flush=True)
         except Exception as e:
             failures += 1
             traceback.print_exc()
             print(f"{tag}/FAILED,0,{type(e).__name__}: {e}")
+    if args.ledger and timings:
+        # one suite record: per-module wall time (failed modules excluded
+        # — a crash should not ledger a bogus duration)
+        from benchmarks.common import ledger_append
+
+        ledger_append(
+            args.ledger, "bench_suite",
+            dict(only=only, modules=sorted(k[:-2] for k in timings)),
+            timings, watch={k: "lower" for k in timings},
+            extra=dict(failures=failures),
+        )
     sys.exit(1 if failures else 0)
 
 
 if __name__ == "__main__":
+    sys.path.insert(0, ".")  # allow `python benchmarks/run.py`
     main()

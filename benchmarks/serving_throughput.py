@@ -14,7 +14,6 @@ JSON: --json [PATH] writes the sweep (default BENCH_serving_throughput.json)
       for CI perf-trajectory artifacts.
 """
 import argparse
-import json
 import sys
 import time
 
@@ -92,7 +91,7 @@ def run_sweep(args):
     return results, dict(
         table=table, table_bytes=table_bytes, infer_seconds=t_infer,
         n_nodes=n, dim=wl["dims"][-1],
-    )
+    ), c
 
 
 def main() -> int:
@@ -128,13 +127,15 @@ def main() -> int:
                     metavar="PATH",
                     help="write a Chrome/Perfetto trace_event timeline of "
                          "the inference build + serving sweep")
+    from benchmarks.common import add_obs_args
+    add_obs_args(ap)
     args = ap.parse_args()
     if args.smoke:
         args.nodes, args.parts, args.layers = 2000, 6, 2
         args.hidden, args.queries, args.warmup = 32, 60, 10
         args.budgets = [16, 256]
 
-    results, meta = run_sweep(args)
+    results, meta, c = run_sweep(args)
 
     print("budget_kb,qps,detail")
     for r in results:
@@ -146,23 +147,39 @@ def main() -> int:
           f"{meta['n_nodes']}x{meta['dim']} built in "
           f"{meta['infer_seconds']:.2f}s (emulated NVMe)")
 
+    config = dict(
+        nodes=args.nodes, parts=args.parts, layers=args.layers,
+        hidden=args.hidden, depth=args.depth,
+        budgets_kb=args.budgets, queries=args.queries,
+        warmup=args.warmup, batch=args.batch, zipf=args.zipf,
+        fp16=args.fp16,
+        storage_latency_us=args.storage_latency_us,
+        storage_gbps=args.storage_gbps,
+    )
+    # flat per-budget headline keys so the sentinel tracks each budget's
+    # qps / tail / hit-rate as its own series
+    headline, watch = {}, {}
+    for r in results:
+        b = r["budget_kb"]
+        headline[f"qps_b{b}"] = r["qps"]
+        headline[f"p99_ms_b{b}"] = r["p99_ms"]
+        headline[f"hit_rate_b{b}"] = r["hit_rate"]
+        watch[f"qps_b{b}"] = "higher"
+        watch[f"p99_ms_b{b}"] = "lower"
+        watch[f"hit_rate_b{b}"] = "higher"
+
     if args.json:
-        payload = dict(
-            config=dict(
-                nodes=args.nodes, parts=args.parts, layers=args.layers,
-                hidden=args.hidden, depth=args.depth,
-                budgets_kb=args.budgets, queries=args.queries,
-                warmup=args.warmup, batch=args.batch, zipf=args.zipf,
-                fp16=args.fp16,
-                storage_latency_us=args.storage_latency_us,
-                storage_gbps=args.storage_gbps,
-            ),
-            table=meta,
-            sweep=results,
+        from benchmarks.common import write_bench_json
+
+        write_bench_json(
+            args.json, dict(config=config, table=meta, sweep=results),
+            "serving_throughput",
         )
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        print(f"json,{args.json},written")
+    if args.ledger:
+        from benchmarks.common import ledger_append
+
+        ledger_append(args.ledger, "serving_throughput", config, headline,
+                      counters=c, watch=watch)
     if args.trace:
         print(f"trace,{args.trace},written")
 

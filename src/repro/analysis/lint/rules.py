@@ -1,4 +1,4 @@
-"""Repo-native lint rules R1..R8 for the SSO runtime's invariants.
+"""Repo-native lint rules R1..R9 for the SSO runtime's invariants.
 
 Every rule here encodes a coordination invariant that an earlier PR fixed by
 hand (see ``src/repro/analysis/README.md`` for the catalog with rationale).
@@ -508,4 +508,55 @@ class RawThreadRule(Rule):
                     "raw threading.Thread(...) — use repro.core.threads."
                     "spawn()/join_bounded() so wedged workers are join-"
                     "bounded and counted [R8]",
+                )
+
+
+# ------------------------------------------------------------------- R9
+@register
+class MetricNameGrammarRule(Rule):
+    """Registry metric names feed the Prometheus exporter 1:1
+    (``storage.io_queue_depth`` -> ``repro_storage_io_queue_depth``), the
+    live sampler's rings, and dashboards that outlive any one run. A name
+    outside the ``<subsystem>.<name>`` grammar either collides after
+    sanitization or lands in no subsystem group — so it's refused at lint
+    time, not discovered on a dashboard. Keyed on the repo's registry
+    receivers (``...metrics.counter(...)`` / the local ``m = ...metrics``
+    alias); ``Tracer.counter(name, value)`` takes two positionals and is
+    not matched."""
+
+    id = "R9"
+    name = "metric-name-grammar"
+    summary = ("MetricsRegistry names must match <subsystem>.<name> "
+               "(lowercase, dot-separated)")
+
+    REGISTRY_RECEIVERS = frozenset({"metrics", "m"})
+    METHODS = frozenset({"counter", "gauge", "histogram"})
+    GRAMMAR = re.compile(r"^[a-z][a-z0-9_]*(\.[a-z][a-z0-9_]*)+$")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if not isinstance(fn, ast.Attribute) or fn.attr not in self.METHODS:
+                continue
+            if _terminal_name(fn.value) not in self.REGISTRY_RECEIVERS:
+                continue
+            # registry registration takes exactly ONE positional: the name
+            # (gauge's fn= is keyword-only here). Tracer.counter(name, value)
+            # and other 2-positional calls are a different API.
+            if len(node.args) != 1:
+                continue
+            arg = node.args[0]
+            if not isinstance(arg, ast.Constant) or not isinstance(
+                arg.value, str
+            ):
+                continue
+            if not self.GRAMMAR.match(arg.value):
+                yield self.finding(
+                    ctx, node,
+                    f"metric name {arg.value!r} violates the "
+                    f"<subsystem>.<name> grammar (lowercase segments "
+                    f"joined by dots, e.g. 'storage.io_queue_depth') — "
+                    f"it would not export/group cleanly [R9]",
                 )

@@ -83,6 +83,14 @@ class Counters:
         # swaps in a live one when PipelineConfig.trace is set.
         self.tracer = NULL_TRACER
         self.metrics = MetricsRegistry()
+        # tracer health as registry gauges: the lambdas read self.tracer at
+        # poll time, so the engine's live-tracer swap is reflected without
+        # re-registration, and a truncated ring is visible in any metrics
+        # snapshot / Prometheus scrape — not just in the exported trace
+        self.metrics.gauge("trace.dropped_events",
+                           fn=lambda: self.tracer.dropped)
+        self.metrics.gauge("trace.ring_occupancy",
+                           fn=lambda: self.tracer.ring_occupancy)
 
     def record_phase(self, name: str, seconds: float) -> None:
         with self._lock:

@@ -474,6 +474,9 @@ class StorageIOQueue:
         self._write_lat = m.histogram("storage.write_seconds")
         self._m_deadline = m.counter("io.deadline_misses")
         self._m_slow_flips = m.counter("io.slow_lane_flips")
+        # live slow-lane state (not just the flip count): a Prometheus
+        # scrape / live sampler tick sees whether the lane is degraded NOW
+        m.gauge("io.slow_lane", fn=lambda: 1.0 if self.slow_lane else 0.0)
         # consumer locks registered for the blocking-submit guard (each a
         # re-entrant lock exposing _is_owned, e.g. the HostCache RLock)
         self._guard_locks: list = []

@@ -83,6 +83,21 @@ class EmbeddingServer:
         self.queries = 0       # lookup() calls
         self.rows_served = 0
         self._closed = False
+        # exporter hooks: the serving stats() numbers double as registry
+        # gauges so the Prometheus endpoint / live sampler sees serve-side
+        # health (hit rate, volume) next to the storage-lane state, without
+        # anyone having to call stats() on a schedule
+        m = self.counters.metrics
+        m.gauge("serve.queries", fn=lambda: self.queries)
+        m.gauge("serve.rows_served", fn=lambda: self.rows_served)
+        m.gauge("serve.hits", fn=lambda: self.hits)
+        m.gauge("serve.misses", fn=lambda: self.misses)
+        m.gauge("serve.hit_rate", fn=self._hit_rate)
+
+    def _hit_rate(self) -> float:
+        with self._stats_lock:
+            total = self.hits + self.misses
+            return (self.hits / total) if total else 0.0
 
     # ---------------------------------------------------------------- blocks
     def _block_range(self, b: int):

@@ -24,10 +24,17 @@ def _infer_smoke(
     fp16: bool = False,
     gather_workers: int = 1,
     trace: str = None,
+    telemetry_port: int = None,
+    ledger: str = None,
 ) -> dict:
     """Drive OffloadedInference (serial + pipelined) and the
-    EmbeddingServer for a GNN arch; returns the check/stat dict."""
+    EmbeddingServer for a GNN arch; returns the check/stat dict.
+
+    ``telemetry_port`` serves live Prometheus metrics over the pipelined
+    run's counters (the serve-side gauges included); ``ledger`` appends a
+    ``run_kind="infer_smoke"`` record to that JSONL ledger."""
     import tempfile
+    import time
 
     import jax
     import numpy as np
@@ -56,6 +63,8 @@ def _infer_smoke(
 
     tables = {}
     stats = {}
+    wall = 0.0
+    c = None
     for d in sorted({0, depth}):
         c = Counters()
         st_ = StorageTier(tempfile.mkdtemp(), counters=c)
@@ -70,8 +79,15 @@ def _infer_smoke(
             ),
             store_dtype=store_dtype,
         )
+        server = None
+        if telemetry_port is not None and d == depth:
+            from repro.obs.live import TelemetryServer
+            server = TelemetryServer(c, port=telemetry_port).start()
         inf.initialize(X)
+        t0 = time.perf_counter()
         name = inf.run(params)
+        if d == depth:
+            wall = time.perf_counter() - t0
         tables[d] = st_.read_rows(name, 0, g.n_nodes)
         inf.close()
         if d != depth:
@@ -103,7 +119,23 @@ def _infer_smoke(
             # re-export: the engine's close() wrote the inference timeline
             # before the serving lookups above recorded their spans
             c.tracer.export_chrome_trace(trace)
+        if server is not None:
+            server.stop()
         st_.close()
+
+    if ledger:
+        from repro.obs.ledger import RunLedger, make_record
+        RunLedger(ledger).append(make_record(
+            "infer_smoke",
+            dict(model=model, depth=depth, cache_mb=cache_mb,
+                 serve_cache_kb=serve_cache_kb, queries=queries,
+                 batch=batch, fp16=fp16, gather_workers=gather_workers),
+            dict(wall_s=wall,
+                 hit_rate=float(stats.get("hit_rate", 0.0)),
+                 p99_ms=float(stats.get("p99_ms", 0.0))),
+            counters=c, watch={"wall_s": "lower", "p99_ms": "lower"},
+            backend=jax.default_backend(),
+        ))
 
     pipeline_matches = bool(
         np.array_equal(tables[0], tables[max(tables)])
@@ -142,6 +174,14 @@ def main():
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write a Chrome/Perfetto trace_event timeline of "
                          "the inference + serving run (ui.perfetto.dev)")
+    ap.add_argument("--telemetry-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve live Prometheus metrics (GET /metrics) for "
+                         "the duration of the run (0 = ephemeral)")
+    ap.add_argument("--ledger", nargs="?", const="RUNS/ledger.jsonl",
+                    default=None, metavar="PATH",
+                    help="append a run record to this JSONL ledger "
+                         "(repro.obs.ledger)")
     args = ap.parse_args()
     if args.trace:
         import logging
@@ -161,6 +201,7 @@ def main():
         serve_cache_kb=args.serve_cache_kb, queries=args.queries,
         batch=args.batch, fp16=args.fp16,
         gather_workers=args.gather_workers, trace=args.trace,
+        telemetry_port=args.telemetry_port, ledger=args.ledger,
     )
     print(f"{args.arch} infer smoke: {r}")
     if args.trace:

@@ -19,9 +19,15 @@ import sys
 
 def _offload_smoke(model: str, depth: int, gather_workers: int = 1,
                    transfer_stage: bool = True, device_slots: int = 2,
-                   trace: str = None) -> dict:
-    """Drive the SSO engine (serial + pipelined) for a GNN arch."""
+                   trace: str = None, telemetry_port: int = None,
+                   ledger: str = None) -> dict:
+    """Drive the SSO engine (serial + pipelined) for a GNN arch.
+
+    ``telemetry_port`` serves live Prometheus metrics over the pipelined
+    run's counters for its duration; ``ledger`` appends a run record
+    (``run_kind="train_offload_smoke"``) to that JSONL ledger."""
     import tempfile
+    import time
 
     import jax
     import numpy as np
@@ -45,7 +51,8 @@ def _offload_smoke(model: str, depth: int, gather_workers: int = 1,
     X = random_features(g.n_nodes, 24, 0)[plan.ro.perm]
     Y = random_labels(g.n_nodes, 8, 0)[plan.ro.perm]
 
-    losses = {}
+    losses, walls = {}, {}
+    c = None
     for d in sorted({0, depth}):
         c = Counters()
         st_ = StorageTier(tempfile.mkdtemp(), counters=c)
@@ -58,16 +65,36 @@ def _offload_smoke(model: str, depth: int, gather_workers: int = 1,
                             # trace the requested depth only (the other
                             # iteration is the serial equivalence check)
                             trace=trace if d == depth else None))
-        eng.initialize(X)
-        loss, grads = eng.run_epoch(params, Y)
-        eng.close()
-        st_.close()
+        server = None
+        if telemetry_port is not None and d == depth:
+            from repro.obs.live import TelemetryServer
+            server = TelemetryServer(c, port=telemetry_port).start()
+        try:
+            eng.initialize(X)
+            t0 = time.perf_counter()
+            loss, grads = eng.run_epoch(params, Y)
+            walls[d] = time.perf_counter() - t0
+        finally:
+            if server is not None:
+                server.stop()
+            eng.close()
+            st_.close()
         losses[d] = loss
         finite = bool(np.isfinite(loss)) and all(
             bool(np.all(np.isfinite(l))) for l in jax.tree.leaves(grads)
         )
         if not finite:
             return dict(finite=False, loss=loss, depth=d)
+    if ledger:
+        from repro.obs.ledger import RunLedger, make_record
+        RunLedger(ledger).append(make_record(
+            "train_offload_smoke",
+            dict(model=model, depth=depth, gather_workers=gather_workers,
+                 transfer_stage=transfer_stage, device_slots=device_slots),
+            dict(wall_s=walls[depth], loss=float(losses[depth])),
+            counters=c, watch={"wall_s": "lower"},
+            backend=jax.default_backend(),
+        ))
     return dict(
         finite=True,
         loss=losses[max(losses)],
@@ -98,6 +125,14 @@ def main():
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write a Chrome/Perfetto trace_event timeline of "
                          "the --offload run (open in ui.perfetto.dev)")
+    ap.add_argument("--telemetry-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve live Prometheus metrics (GET /metrics) for "
+                         "the duration of the --offload run (0 = ephemeral)")
+    ap.add_argument("--ledger", nargs="?", const="RUNS/ledger.jsonl",
+                    default=None, metavar="PATH",
+                    help="append a run record to this JSONL ledger "
+                         "(repro.obs.ledger)")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
     if args.trace:
@@ -128,7 +163,9 @@ def main():
         model = args.arch.split("-")[0]
         r = _offload_smoke(model, args.pipeline_depth, args.gather_workers,
                            transfer_stage=not args.no_transfer_stage,
-                           device_slots=args.device_slots, trace=args.trace)
+                           device_slots=args.device_slots, trace=args.trace,
+                           telemetry_port=args.telemetry_port,
+                           ledger=args.ledger)
         print(f"{args.arch} offload smoke: {r}")
         if args.trace:
             print(f"trace written to {args.trace}")

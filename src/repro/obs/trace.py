@@ -154,6 +154,18 @@ class Tracer:
     def events_recorded(self) -> int:
         return len(self._ring)
 
+    @property
+    def ring_capacity(self) -> int:
+        return self._ring.maxlen or 0
+
+    @property
+    def ring_occupancy(self) -> float:
+        """Fill fraction of the bounded ring (1.0 = at capacity, i.e. the
+        next event evicts the oldest) — exported as the
+        ``trace.ring_occupancy`` registry gauge."""
+        cap = self._ring.maxlen or 0
+        return len(self._ring) / cap if cap else 0.0
+
     def events(self) -> list:
         """Snapshot of the ring as dicts (test/introspection helper; the
         canonical output is :meth:`export_chrome_trace`)."""
@@ -189,7 +201,15 @@ class Tracer:
             tnames = dict(self._thread_names)
             dropped = self.dropped
         evs = [dict(ph="M", name="process_name", pid=pid, tid=0,
-                    args=dict(name="sso-runtime"))]
+                    args=dict(name="sso-runtime")),
+               # self-describing truncation: a reader (or the artifact
+               # lint) can tell a short run from a ring that wrapped
+               # without consulting anything outside the file
+               dict(ph="M", name="trace_ring", pid=pid, tid=0,
+                    args=dict(dropped_events=dropped,
+                              ring_capacity=self._ring.maxlen or 0,
+                              events_exported=len(ring),
+                              truncated=dropped > 0))]
         for tid in sorted(tnames):
             evs.append(dict(ph="M", name="thread_name", pid=pid, tid=tid,
                             args=dict(name=tnames[tid])))

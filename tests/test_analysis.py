@@ -368,10 +368,44 @@ def test_r8_suppression_and_clean():
     assert _active(R8_CLEAN, select=["R8"]) == []
 
 
+# ------------------------------------------------------------------ R9
+R9_BAD = """
+def wire(self):
+    m = self.counters.metrics
+    m.counter("ioRetries")
+    m.gauge("queue_depth", fn=lambda: 0)
+    self.counters.metrics.histogram("Storage.read.Seconds")
+"""
+R9_ALLOWED = """
+def wire(self):
+    m = self.counters.metrics
+    m.counter("LegacyName")  # repro: allow[R9]
+"""
+R9_CLEAN = """
+def wire(self, tracer):
+    m = self.counters.metrics
+    m.counter("io.retries")
+    m.gauge("storage.io_queue_depth", fn=lambda: 0)
+    m.histogram("serve.lookup_seconds")
+    self.counters.metrics.gauge("trace.ring_occupancy", fn=lambda: 0.0)
+    tracer.counter("cache_bytes", 123)   # Tracer track: 2 positionals
+    reg.counter("whatever")              # unknown receiver: not keyed
+"""
+
+
+def test_r9_flags_bad_metric_names():
+    assert _ids(_active(R9_BAD, select=["R9"])) == ["R9", "R9", "R9"]
+
+
+def test_r9_suppression_and_clean():
+    assert _active(R9_ALLOWED, select=["R9"]) == []
+    assert _active(R9_CLEAN, select=["R9"]) == []
+
+
 # ----------------------------------------------------------- framework
-def test_registry_has_all_eight_rules():
+def test_registry_has_all_nine_rules():
     ids = [r.id for r in all_rules()]
-    assert ids == [f"R{i}" for i in range(1, 9)]
+    assert ids == [f"R{i}" for i in range(1, 10)]
     assert all(r.summary for r in all_rules())
 
 
@@ -399,7 +433,7 @@ def test_syntax_error_reported_not_raised():
 def test_json_report_schema():
     doc = json.loads(render_json(lint_source(R1_BAD + R6_ALLOWED), 1, ["x.py"]))
     assert doc["kind"] == "repro-lint" and doc["version"] == 1
-    assert [r["id"] for r in doc["rules"]] == [f"R{i}" for i in range(1, 9)]
+    assert [r["id"] for r in doc["rules"]] == [f"R{i}" for i in range(1, 10)]
     assert doc["counts"]["findings"] == len(doc["findings"]) > 0
     assert doc["counts"]["suppressed"] == len(doc["suppressed"]) == 1
     f = doc["findings"][0]
